@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, table printing."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def print_table(title: str, headers: Sequence[str], rows: List[Sequence]):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+
+
+def fmt(x, nd=3):
+    if isinstance(x, float):
+        if x != 0 and (abs(x) < 1e-3 or abs(x) >= 1e4):
+            return f"{x:.{nd}e}"
+        return f"{x:.{nd}f}"
+    return str(x)

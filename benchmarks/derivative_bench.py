@@ -1,0 +1,54 @@
+"""Paper Table 5: runtime of grad/div via FFT vs FD8.
+
+Paper (V100, per call): 64^3 grad 1.7e-4 s FFT vs 3.6e-5 s FD8 (4.7x);
+256^3 grad 4.1e-3 vs 9.4e-4 (4.4x). The claim to reproduce: FD8 is a
+consistent multiple faster than the spectral path at fixed accuracy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import derivatives as D
+from benchmarks.common import fmt, print_table, time_fn
+
+
+def run(sizes=(32, 64, 96)):
+    rows = []
+    speedups = []
+    for n in sizes:
+        shape = (n, n, n)
+        f = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (3,) + shape, jnp.float32)
+        fns = {
+            ("grad", "fft"): jax.jit(lambda f: D.spectral_grad(f)),
+            ("grad", "fd8"): jax.jit(lambda f: D.fd8_grad(f)),
+            ("div", "fft"): jax.jit(lambda w: D.spectral_div(w)),
+            ("div", "fd8"): jax.jit(lambda w: D.fd8_div(w)),
+        }
+        times = {}
+        for (op, scheme), fn in fns.items():
+            arg = f if op == "grad" else w
+            times[(op, scheme)] = time_fn(fn, arg)
+        for op in ("grad", "div"):
+            s = times[(op, "fft")] / times[(op, "fd8")]
+            speedups.append(s)
+            rows.append([f"{n}^3", op, fmt(times[(op, 'fft')], 4),
+                         fmt(times[(op, 'fd8')], 4), fmt(s, 2)])
+    print_table(
+        "Table 5 analogue: first-derivative runtime FFT vs FD8 (CPU; paper "
+        "reports 3.5-4.7x on V100 — CPU XLA constants are smaller, and the "
+        "3-transform spectral divergence is relatively cheaper than cuFFT's)",
+        ["N", "op", "fft s/call", "fd8 s/call", "speedup"],
+        rows)
+    grad_speedups = [s for r, s in zip(rows, speedups) if r[1] == "grad"]
+    assert sum(grad_speedups) / len(grad_speedups) > 1.25, \
+        "FD8 gradient should beat FFT"
+    assert sum(speedups) / len(speedups) > 1.0, \
+        "FD8 should beat FFT on average"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun.jsonl (markdown to stdout)."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ARCH_ORDER = [
+    "qwen1.5-0.5b", "smollm-135m", "qwen2-7b", "phi3-medium-14b",
+    "whisper-large-v3", "olmoe-1b-7b", "deepseek-moe-16b", "internvl2-1b",
+    "mamba2-780m", "jamba-v0.1-52b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    recs = {}
+    for line in Path(path).read_text().splitlines():
+        if not line.strip():
+            continue
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r.get("mesh", "single"))] = r
+    return recs
+
+
+def e(x, nd=2):
+    return f"{x:.{nd}e}"
+
+
+def dryrun_table(recs, mesh):
+    out = [f"| arch | shape | status | compile s | peak GB/dev | "
+           f"collectives |",
+           "|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                out.append(f"| {a} | {s} | MISSING | | | |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | skip | | | "
+                           f"{r['status'][:60]} |")
+                continue
+            mem = r.get("memory", {})
+            coll = r.get("collectives_by_kind", {})
+            ckeys = "+".join(sorted(coll, key=lambda k: -coll[k])[:3])
+            out.append(
+                f"| {a} | {s} | ok | {r.get('compile_s', '')} | "
+                f"{mem.get('peak_bytes', 0) / 1e9:.2f} | {ckeys} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="single"):
+    out = ["| arch | shape | compute s | memory s | collective s | bound | "
+           "MODEL_FLOPS | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None or r["status"] != "ok":
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {a} | {s} | {e(rl['compute_s'])} | {e(rl['memory_s'])} | "
+                f"{e(rl['collective_s'])} | **{rl['bound']}** | "
+                f"{e(rl['model_flops'])} | {rl['useful_ratio']:.2f} | "
+                f"{rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def claire_rows(recs):
+    out = ["| config | mode | mesh | compute s | memory s | collective s | "
+           "bound | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if not s.startswith("claire"):
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | {m} | err | | | | |")
+            continue
+        rl = r["roofline"]
+        out.append(f"| {a} | {s.replace('claire_', '')} | {m} | "
+                   f"{e(rl['compute_s'])} | {e(rl['memory_s'])} | "
+                   f"{e(rl['collective_s'])} | {rl['bound']} | "
+                   f"{r['memory'].get('peak_bytes', 0) / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    recs = load(path)
+    print("### Dry-run ledger — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n### Dry-run ledger — multi pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n### Roofline — single pod\n")
+    print(roofline_table(recs, "single"))
+    print("\n### Roofline — multi pod\n")
+    print(roofline_table(recs, "multi"))
+    print("\n### Registration workload cells\n")
+    print(claire_rows(recs))

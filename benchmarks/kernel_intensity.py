@@ -1,0 +1,72 @@
+"""Paper Table 2: arithmetic intensity of the interpolation variants.
+
+The analytic FLOPS/MOPS model is the paper's: 20 B/point MOPS (3 coord
+floats + 1 grid value + 1 output), FLOP counts per basis from the weight
+polynomials + taps. The device intensity uses the TPU v5e target
+(197 TFLOP/s / 819 GB/s = 241 FLOP/B) and, for reference, the paper's V100
+(14 TFLOP/s / 900 GB/s = 15.6). Every variant sits far below both ->
+memory-bound on either device, which is the paper's central kernel claim.
+
+Measured side (this container, CPU): wall time of the XLA gather kernels,
+reported as effective bandwidth of the 20 B/point model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as G
+from repro.core import interp as I
+from benchmarks.common import fmt, print_table, time_fn
+
+# analytic per-point FLOP counts (adds/mults of weights + taps + accum)
+FLOPS = {
+    "linear (TXTLIN)": 30,
+    "cubic_lagrange (LAG)": 221,
+    "cubic_bspline (TXTSPL)": 294,   # incl. per-point share of prefilter
+    "prefilter (15pt x3)": 3 * 30,
+}
+MOPS_BYTES = 20.0
+
+V5E_INTENSITY = 197e12 / 819e9
+V100_INTENSITY = 14e12 / 900e9
+
+
+def run(n: int = 48):
+    shape = (n, n, n)
+    f = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    q = G.index_coords(shape) + jax.random.uniform(
+        jax.random.PRNGKey(1), (3,) + shape, minval=-0.5, maxval=0.5)
+    points = n ** 3
+
+    fns = {
+        "linear (TXTLIN)": jax.jit(lambda f, q: I.interp_linear(f, q)),
+        "cubic_lagrange (LAG)": jax.jit(lambda f, q: I.interp_cubic_lagrange(f, q)),
+        "cubic_bspline (TXTSPL)": jax.jit(
+            lambda f, q: I.interp_cubic_bspline(f, q, prefiltered=False)),
+    }
+    rows = []
+    for name, flops in FLOPS.items():
+        intensity = flops / MOPS_BYTES
+        bound_v5e = "memory" if intensity < V5E_INTENSITY else "compute"
+        t = None
+        bw = None
+        if name in fns:
+            t = time_fn(fns[name], f, q)
+            bw = points * MOPS_BYTES / t / 1e9
+        rows.append([name, flops, MOPS_BYTES, fmt(intensity, 2),
+                     bound_v5e,
+                     fmt(t * 1e3, 2) if t else "-",
+                     fmt(bw, 2) if bw else "-"])
+    print_table(
+        f"Table 2 analogue: kernel intensity (N={n}^3; device intensity "
+        f"v5e={V5E_INTENSITY:.0f}, V100={V100_INTENSITY:.1f} FLOP/B)",
+        ["kernel", "FLOPs/pt", "MOPS B/pt", "intensity", "bound(v5e)",
+         "cpu ms/call", "eff GB/s (cpu)"],
+        rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

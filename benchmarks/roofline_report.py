@@ -1,0 +1,58 @@
+"""Render the 40-cell roofline table from dry-run JSONL records
+(EXPERIMENTS.md §Roofline source of truth)."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import fmt, print_table
+
+DEFAULT = "results/dryrun.jsonl"
+
+
+def load(path: str):
+    recs = {}
+    p = Path(path)
+    if not p.exists():
+        return recs
+    for line in p.read_text().splitlines():
+        if not line.strip():
+            continue
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r.get("mesh", "single"))] = r
+    return recs
+
+
+def render(path: str = DEFAULT, mesh: str = "single"):
+    recs = load(path)
+    rows = []
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r.get("status") != "ok":
+            rows.append([arch, shape, "SKIP/ERR", "-", "-", "-", "-", "-",
+                         "-", r.get("status", "")[:40]])
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        rows.append([
+            arch, shape, rl["bound"],
+            fmt(rl["compute_s"]), fmt(rl["memory_s"]), fmt(rl["collective_s"]),
+            fmt(rl.get("useful_ratio", 0.0), 2),
+            fmt(rl.get("roofline_fraction", 0.0), 4),
+            fmt(mem.get("peak_bytes", 0) / 1e9, 1),
+            "",
+        ])
+    print_table(
+        f"Roofline baselines ({mesh} pod, from {path})",
+        ["arch", "shape", "bound", "compute_s", "memory_s", "collective_s",
+         "useful", "roofline_frac", "peak GB/dev", "note"],
+        rows)
+    return rows
+
+
+if __name__ == "__main__":
+    render(sys.argv[1] if len(sys.argv) > 1 else DEFAULT,
+           sys.argv[2] if len(sys.argv) > 2 else "single")

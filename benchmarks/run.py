@@ -1,0 +1,59 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Each module prints its table and asserts the paper's qualitative claim
+(orderings / invariances); failures here mean the reproduction regressed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smallest sizes (CI)")
+    ap.add_argument("--dryrun-file", default="results/dryrun.jsonl")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (baseline_comparison, derivative_accuracy,
+                            derivative_bench, interp_accuracy,
+                            kernel_intensity, registration_bench,
+                            roofline_report, semilag_bench)
+
+    jobs = [
+        ("Table 2 kernel intensity", lambda: kernel_intensity.run(32 if args.fast else 48)),
+        ("Table 3 SL transport", lambda: semilag_bench.run((24,) if args.fast else (32, 48))),
+        ("Table 4 interp accuracy", lambda: interp_accuracy.run((32,) if args.fast else (32, 64))),
+        ("Table 5 derivative runtime", lambda: derivative_bench.run((32,) if args.fast else (32, 64, 96))),
+        ("Fig 2 derivative accuracy", lambda: derivative_accuracy.run(32 if args.fast else 64)),
+        ("Table 7 registration variants", lambda: registration_bench.run(24 if args.fast else 32)),
+        ("Table 8 GN vs GD baseline", lambda: baseline_comparison.run(16 if args.fast else 24)),
+        ("Roofline table (single pod)", lambda: roofline_report.render(args.dryrun_file, "single")),
+        ("Roofline table (multi pod)", lambda: roofline_report.render(args.dryrun_file, "multi")),
+    ]
+
+    failures = []
+    for name, fn in jobs:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[bench] {name}: OK ({time.time() - t0:.1f}s)")
+        except Exception as e:
+            failures.append(name)
+            print(f"[bench] {name}: FAILED ({e})")
+            traceback.print_exc()
+    if failures:
+        print(f"\n[bench] FAILURES: {failures}")
+        return 1
+    print("\n[bench] all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

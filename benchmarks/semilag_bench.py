@@ -1,0 +1,64 @@
+"""Paper Table 3: semi-Lagrangian transport — forward+backward advection
+roundtrip; relative error + wall time + effective bandwidth per
+interpolation variant.
+
+The paper deforms a brain image along a registration velocity forward then
+backward in time and reports ||roundtrip - original|| / ||original||:
+CPU/GPU-LAG 5.3e-2 (64^3) .. 2.4e-2 (256^3); GPU-TXTSPL ~2x better
+(2.5e-2 / 1.7e-2); GPU-TXTLIN worse (1.2e-1 / 5.5e-2). We reproduce the
+ORDERING and magnitudes on synthetic brain phantoms at CPU-feasible sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as G
+from repro.core import transport as T
+from repro.data import synthetic
+from benchmarks.common import fmt, print_table, time_fn
+
+VARIANTS = [
+    ("linear (TXTLIN)", "linear"),
+    ("cubic_lagrange (LAG)", "cubic_lagrange"),
+    ("cubic_bspline (TXTSPL)", "cubic_bspline"),
+]
+
+
+def run(sizes=(32, 48)):
+    rows = []
+    for n in sizes:
+        shape = (n, n, n)
+        pair = synthetic.make_pair(jax.random.PRNGKey(0), shape, amplitude=0.7)
+        for label, method in VARIANTS:
+            cfg = T.TransportConfig(interp=method, nt=4)
+
+            @jax.jit
+            def roundtrip(m0, v):
+                fwd = T.solve_state(m0, v, cfg)[-1]
+                back = T.solve_state(fwd, -v, cfg)[-1]
+                return back
+
+            back = roundtrip(pair.m0, pair.v_true)
+            err = float(G.norm_l2(back - pair.m0) / G.norm_l2(pair.m0))
+            t = time_fn(roundtrip, pair.m0, pair.v_true, warmup=1, iters=3)
+            # 14 interpolation kernel calls per roundtrip (paper's count),
+            # 20 B/point each
+            bw = 14 * (n ** 3) * 20 / t / 1e9
+            rows.append([f"{n}^3", label, fmt(err), fmt(t, 3), fmt(bw, 2)])
+    print_table(
+        "Table 3 analogue: SL advection roundtrip (synthetic phantom, CPU)",
+        ["N", "variant", "rel err", "time s", "eff GB/s"],
+        rows)
+    # ordering assertions (the paper's qualitative claims)
+    errs = {(r[0], r[1]): float(r[2]) for r in rows}
+    for n in sizes:
+        k = f"{n}^3"
+        assert errs[(k, "cubic_bspline (TXTSPL)")] <= errs[(k, "cubic_lagrange (LAG)")] * 1.25
+        assert errs[(k, "linear (TXTLIN)")] >= errs[(k, "cubic_lagrange (LAG)")]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

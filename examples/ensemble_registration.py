@@ -1,0 +1,55 @@
+"""Population-study (ensemble) registration — the paper's motivating
+clinical workload: many independent registrations, batched and vmapped
+(shards over the mesh data axes on a real cluster).
+
+    PYTHONPATH=src python examples/ensemble_registration.py [--batch 4]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gauss_newton as GN
+from repro.core import grid as G
+from repro.core import transport as T
+from repro.data import synthetic
+from repro.distributed.claire_dist import ensemble_newton_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--grid", type=int, default=16)
+    ap.add_argument("--newton-steps", type=int, default=5)
+    args = ap.parse_args()
+
+    grid = (args.grid,) * 3
+    batch = synthetic.make_batch(jax.random.PRNGKey(0), grid, args.batch,
+                                 amplitude=0.5)
+    cfg = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4)
+    gn = GN.GNConfig(max_pcg=30)
+    step = jax.jit(ensemble_newton_step(cfg, gn))
+
+    v = jnp.zeros((args.batch, 3) + grid, jnp.float32)
+    m0, m1 = batch.m0, batch.m1
+    print(f"ensemble of {args.batch} registrations at {grid}")
+    t0 = time.perf_counter()
+    for k in range(args.newton_steps):
+        stats = step(m0, m1, v, jnp.float32(5e-4), jnp.float32(1e-4),
+                     jnp.float32(0.25))
+        v = stats.v_new
+        mis = jnp.asarray(stats.j_mismatch)
+        print(f"  GN step {k}: mean J_mismatch = {float(jnp.mean(mis)):.4e} "
+              f"(per pair: {[f'{float(x):.3e}' for x in mis]})")
+    dt = time.perf_counter() - t0
+    print(f"\n{args.newton_steps} joint Newton steps over {args.batch} pairs: "
+          f"{dt:.1f}s ({dt / args.newton_steps / args.batch:.2f} "
+          f"s/step/pair)")
+    print("on the production mesh the pair axis shards over "
+          "(pod, data) = 32-way: zero cross-pair collectives.")
+
+
+if __name__ == "__main__":
+    main()

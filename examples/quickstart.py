@@ -1,0 +1,30 @@
+"""Quickstart: register two synthetic 3D brain phantoms in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.core.registration import register
+from repro.core import metrics
+from repro.data import synthetic
+
+# 1. Make a registration problem: a brain-like template m0 and a reference
+#    m1 = m0 warped by a random (ground-truth) diffeomorphism.
+grid = (32, 32, 32)
+pair = synthetic.make_pair(jax.random.PRNGKey(0), grid, amplitude=0.5)
+print(f"generated pair at {grid}; initial Dice = "
+      f"{float(metrics.dice(pair.labels0, pair.labels1)):.3f}")
+
+# 2. Register with the paper's fastest accurate variant:
+#    8th-order finite-difference derivatives + cubic B-spline interpolation.
+res = register(pair.m0, pair.m1, variant="fd8-cubic", verbose=True)
+
+# 3. Inspect the paper's quality metrics.
+print(f"\nconverged      : {res.converged} in {res.iters} Gauss-Newton steps "
+      f"({res.matvecs} Hessian matvecs)")
+print(f"rel. mismatch  : {res.mismatch_rel:.3e}")
+print(f"det F          : min {res.detF['min']:.2f} / mean "
+      f"{res.detF['mean']:.2f} / max {res.detF['max']:.2f}  "
+      f"(diffeomorphic iff min > 0)")
+print(f"wall time      : {res.wall_time_s:.1f}s")

@@ -1,0 +1,55 @@
+"""Batched serving example: prefill a prompt batch, then stream greedy
+decode steps against the KV/SSM cache (per-layer donated buffers).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-7b --gen 24
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, p, g = args.requests, args.prompt, args.gen
+
+    batch = model.make_batch(jax.random.PRNGKey(1),
+                             ShapeConfig("serve", p, b, "prefill"))["batch"]
+    t0 = time.perf_counter()
+    logits = jax.jit(model.prefill)(params, batch)
+    next_tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    print(f"prefill {b}x{p}: {time.perf_counter() - t0:.2f}s")
+
+    cache = model.make_cache(b, p + g)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    toks = [next_tok]
+    t0 = time.perf_counter()
+    for i in range(g):
+        logits, cache = decode(params, cache, toks[-1],
+                               jnp.asarray(p + i, jnp.int32))
+        toks.append(jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))
+    jax.block_until_ready(toks[-1])
+    dt = time.perf_counter() - t0
+    print(f"decode {g} steps x {b} reqs: {dt:.2f}s "
+          f"({b * g / dt:.1f} tok/s on CPU smoke config)")
+    print("request 0 generated:", [int(t[0, 0]) for t in toks])
+
+
+if __name__ == "__main__":
+    main()

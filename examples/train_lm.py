@@ -1,0 +1,76 @@
+"""End-to-end LM training driver: train a ~135M-param architecture (SmolLM
+reduced or full) for a few hundred steps on synthetic tokens with the full
+production stack — sharded train step, AdamW + cosine schedule, prefetching
+data pipeline, async checkpoints, restart-on-relaunch.
+
+CPU demo (reduced config, a few minutes):
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Real run (full config; needs accelerators):
+    PYTHONPATH=src python examples/train_lm.py --full --steps 300 \
+        --batch 32 --seq 2048 --mesh 16,16
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import SyntheticTokens
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke config)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    tot, act = cfg.param_counts()
+    print(f"[train_lm] {cfg.name}: {tot / 1e6:.1f}M params "
+          f"({act / 1e6:.1f}M active)")
+
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    mesh = make_mesh(mesh_shape, ("data", "model")[: len(mesh_shape)])
+
+    trainer = Trainer(model, mesh, TrainerConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 4, 10),
+        log_every=max(args.steps // 20, 1),
+        opt=AdamWConfig(lr=1e-3, total_steps=args.steps,
+                        warmup_steps=max(args.steps // 20, 1)),
+    ))
+
+    stream = SyntheticTokens(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    def batches():
+        for tokens, targets in stream:
+            yield {"tokens": jnp.asarray(tokens),
+                   "targets": jnp.asarray(targets)}
+
+    state = trainer.run(batches())
+    first = trainer.metrics_log[0]["loss"]
+    last = trainer.metrics_log[-1]["loss"]
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} over "
+          f"{int(state.opt['step'])} steps "
+          f"(stragglers: {trainer.straggler_steps})")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

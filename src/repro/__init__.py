@@ -1,0 +1,18 @@
+"""repro: Fast 3D diffeomorphic image registration on TPU (JPDC 2020
+reproduction) + multi-pod JAX LM substrate.
+
+Subpackages:
+  core         the paper's Gauss-Newton-Krylov registration solver
+  kernels      Pallas TPU kernels (fd8, prefilter, interp3d, flashattn)
+  models       LM substrate (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  configs      assigned architectures + registration configs (--arch)
+  data         synthetic image pairs + token pipeline
+  optim        AdamW (bf16 params, fp32 master)
+  distributed  sharding rules, halo exchange, gradient compression
+  train        sharded steps + fault-tolerant trainer
+  checkpoint   atomic async checkpoints with resharding restore
+  launch       mesh / dryrun / train / serve / register entry points
+  roofline     trip-count-aware HLO cost analysis
+"""
+
+__version__ = "1.0.0"

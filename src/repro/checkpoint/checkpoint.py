@@ -1,0 +1,167 @@
+"""Atomic, shardable checkpoints with resharding restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json        {paths, shapes, dtypes, step}
+             <leaf-path>.npy      one array per pytree leaf
+
+Writes go to a temp directory first and are renamed into place (atomic on
+POSIX), so a preempted node never leaves a half-written checkpoint visible.
+Restore maps each leaf onto the *target* sharding via ``jax.device_put`` —
+the mesh at restore time may differ from the mesh at save time (elastic
+re-scaling: the checkpoint is mesh-agnostic on disk).
+
+``AsyncCheckpointer`` runs saves on a daemon thread (double-buffered: at
+most one outstanding save; the trainer never blocks on I/O unless two saves
+collide).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+#: numpy cannot round-trip ml_dtypes (bfloat16, fp8) through .npy — store
+#: them bit-cast to a same-width integer type and record the logical dtype.
+_BITCAST = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def save_checkpoint(directory: str, tree: Any, step: int,
+                    keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory))
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "leaves": []}
+    for path, leaf in leaves:
+        name = _leaf_path(path)
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", ".") + ".npy"
+        logical_dtype = str(arr.dtype)
+        if logical_dtype in _BITCAST:
+            arr = arr.view(_BITCAST[logical_dtype][0])
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append(
+            {"path": name, "file": fname, "shape": list(arr.shape),
+             "dtype": logical_dtype})
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc_old(directory, keep)
+    return str(final)
+
+
+def _gc_old(directory: Path, keep: int):
+    steps = sorted(
+        (p for p in directory.iterdir() if re.match(r"step_\d+$", p.name)),
+        key=lambda p: int(p.name.split("_")[1]))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.iterdir()
+             if re.match(r"step_\d+$", p.name)]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, target: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``target`` (abstract or concrete tree).
+
+    ``shardings``: optional pytree of NamedShardings (same structure); leaves
+    are device_put with their target sharding — this is what makes restore
+    elastic across mesh shapes.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    ckpt = Path(directory) / f"step_{step:08d}"
+    with open(ckpt / "manifest.json") as f:
+        manifest = json.load(f)
+    by_path = {leaf["path"]: leaf for leaf in manifest["leaves"]}
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(target)
+    flat, treedef = paths_leaves
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+
+    out = []
+    for (path, leaf), sh in zip(flat, shard_flat):
+        name = _leaf_path(path)
+        if name not in by_path:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = np.load(ckpt / by_path[name]["file"])
+        logical_dtype = by_path[name]["dtype"]
+        if logical_dtype in _BITCAST:
+            arr = arr.view(_BITCAST[logical_dtype][1])
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"{name}: shape {arr.shape} != expected {expect}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), out)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a daemon thread (one in flight)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, tree: Any, step: int):
+        self.wait()
+        # device_get on the caller thread (consistent snapshot), I/O async
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _run():
+            self.last_path = save_checkpoint(self.directory, host_tree, step,
+                                             keep=self.keep)
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,224 @@
+"""Gauss-Newton-Krylov driver (Algorithm 2.1).
+
+One Newton step = one fully-jitted computation:
+  gradient evaluation (state + adjoint solves)
+  -> PCG on  H vt = -g   (preconditioner (beta*A)^-1, Eisenstat-Walker forcing)
+  -> Armijo backtracking line search
+  -> v update.
+The outer iteration (stopping test, beta-continuation, logging) runs in
+Python; the jitted step is compiled once per (grid shape, numeric config)
+and reused across iterations and continuation levels (beta, gamma are traced
+scalars).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gradient as _grad
+from . import grid as _grid
+from . import hessian as _hess
+from . import objective as _obj
+from . import pcg as _pcg
+from . import transport as _tr
+
+
+class NewtonStepStats(NamedTuple):
+    v_new: jnp.ndarray
+    gnorm: jnp.ndarray          # ||g(v)||_L2 at the *incoming* iterate
+    j_total: jnp.ndarray        # J(v) at the incoming iterate
+    j_mismatch: jnp.ndarray
+    j_reg: jnp.ndarray
+    pcg_iters: jnp.ndarray      # Hessian matvecs spent in PCG
+    pcg_residual: jnp.ndarray
+    alpha: jnp.ndarray          # accepted line-search step
+    ls_evals: jnp.ndarray       # objective evaluations in the line search
+
+
+class GNConfig(NamedTuple):
+    beta: float = 5e-4          # target regularization weight (paper default)
+    gamma: float = 1e-4         # divergence penalty (paper default)
+    tol_rel_grad: float = 5e-2  # relative gradient stopping tolerance
+    max_newton: int = 50
+    max_pcg: int = 500
+    forcing_max: float = 0.5    # Eisenstat-Walker cap
+    ls_max: int = 12            # Armijo backtracking trials
+    ls_c1: float = 1e-4
+    continuation: bool = False  # beta-continuation ladder (decade steps)
+    beta_init: float = 1.0      # ladder start when continuation is on
+    cont_reduce: float = 10.0   # ladder ratio
+    cont_tol: float = 2.5e-1    # per-level relative-gradient tolerance
+
+
+def _make_step(cfg: _tr.TransportConfig, gn: GNConfig):
+    """Build the jitted Newton step for a fixed numeric configuration."""
+
+    def step(m0, m1, v, beta, gamma, eta):
+        gs = _grad.evaluate(m0, m1, v, beta, gamma, cfg)
+        gnorm = _grid.norm_l2(gs.g)
+
+        mv = partial(_hess.matvec, gs=gs, v=v, beta=beta, gamma=gamma, cfg=cfg)
+        precond = _pcg.make_reg_preconditioner(beta, gamma)
+        sol = _pcg.solve(mv, -gs.g, precond, tol=eta, max_iters=gn.max_pcg)
+        vt = sol.x
+
+        # Armijo backtracking: J(v + a*vt) <= J(v) + c1*a*<g, vt>.
+        j0 = gs.j_mismatch + gs.j_reg
+        gdotp = _grid.inner(gs.g, vt)
+
+        def trial_obj(a):
+            return _obj.objective(m0, m1, v + a * vt, beta, gamma, cfg)
+
+        def ls_cond(state):
+            a, j_trial, k = state
+            insufficient = j_trial > j0 + gn.ls_c1 * a * gdotp
+            return jnp.logical_and(insufficient, k < gn.ls_max)
+
+        def ls_body(state):
+            a, _, k = state
+            a = 0.5 * a
+            return (a, trial_obj(a), k + 1)
+
+        a0 = jnp.asarray(1.0, dtype=v.dtype)
+        state = (a0, trial_obj(a0), jnp.asarray(0, jnp.int32))
+        a, _, ls_evals = jax.lax.while_loop(ls_cond, ls_body, state)
+        # If the search direction failed entirely, fall back to a small
+        # preconditioned gradient step (keeps the iteration alive).
+        ok = ls_evals < gn.ls_max
+        v_new = jnp.where(ok, v + a * vt, v - 0.1 * precond(gs.g))
+
+        return NewtonStepStats(
+            v_new=v_new,
+            gnorm=gnorm,
+            j_total=j0,
+            j_mismatch=gs.j_mismatch,
+            j_reg=gs.j_reg,
+            pcg_iters=sol.iters,
+            pcg_residual=sol.rel_residual,
+            alpha=a,
+            ls_evals=ls_evals + 1,
+        )
+
+    return jax.jit(step)
+
+
+class GNResult(NamedTuple):
+    v: jnp.ndarray
+    iters: int
+    matvecs: int
+    gnorm0: float
+    gnorm: float
+    rel_grad: float
+    converged: bool
+    history: List[Dict[str, float]]
+    wall_time_s: float
+
+
+def solve(
+    m0: jnp.ndarray,
+    m1: jnp.ndarray,
+    cfg: _tr.TransportConfig,
+    gn: GNConfig = GNConfig(),
+    v0: jnp.ndarray | None = None,
+    verbose: bool = False,
+) -> GNResult:
+    """Run the Gauss-Newton-Krylov solver  g(v) = 0  for v."""
+    shape = m0.shape
+    v = v0 if v0 is not None else jnp.zeros((3,) + shape, dtype=m0.dtype)
+    step_fn = _make_step(cfg, gn)
+
+    # beta-continuation ladder (decade steps down to the target beta).
+    if gn.continuation and gn.beta_init > gn.beta:
+        betas = []
+        b = gn.beta_init
+        while b > gn.beta * (1.0 + 1e-12):
+            betas.append(b)
+            b /= gn.cont_reduce
+        betas.append(gn.beta)
+    else:
+        betas = [gn.beta]
+
+    history: List[Dict[str, float]] = []
+    total_matvecs = 0
+    total_iters = 0
+    gnorm0_global = None
+    gnorm_last = None
+    t0 = time.perf_counter()
+
+    for level, beta in enumerate(betas):
+        is_target = level == len(betas) - 1
+        tol = gn.tol_rel_grad if is_target else gn.cont_tol
+        budget = gn.max_newton - total_iters if is_target else max(
+            2, (gn.max_newton - total_iters) // 4
+        )
+        gnorm0_level = None
+        prev_gnorm = None
+        for _ in range(max(budget, 1)):
+            # Eisenstat-Walker superlinear forcing: eta = min(cap, sqrt(g/g0)).
+            if gnorm0_level is None or prev_gnorm is None:
+                eta = gn.forcing_max
+            else:
+                eta = float(
+                    min(gn.forcing_max, (prev_gnorm / gnorm0_level) ** 0.5)
+                )
+            stats = step_fn(m0, m1, v, jnp.float32(beta), jnp.float32(gn.gamma), jnp.float32(eta))
+            gnorm = float(stats.gnorm)
+            if gnorm0_level is None:
+                gnorm0_level = gnorm
+            if gnorm0_global is None:
+                gnorm0_global = gnorm
+            rel = gnorm / gnorm0_level if gnorm0_level > 0 else 0.0
+            history.append(
+                dict(
+                    level=level,
+                    beta=beta,
+                    gnorm=gnorm,
+                    rel_grad=rel,
+                    j=float(stats.j_total),
+                    j_mismatch=float(stats.j_mismatch),
+                    j_reg=float(stats.j_reg),
+                    pcg_iters=int(stats.pcg_iters),
+                    alpha=float(stats.alpha),
+                    ls_evals=int(stats.ls_evals),
+                )
+            )
+            if verbose:
+                h = history[-1]
+                print(
+                    f"[GN] lvl={level} beta={beta:.1e} it={total_iters:3d} "
+                    f"J={h['j']:.4e} mis={h['j_mismatch']:.4e} |g|rel={rel:.3e} "
+                    f"pcg={h['pcg_iters']} a={h['alpha']:.3f}"
+                )
+            gnorm_last = gnorm
+            if rel <= tol:
+                # converged at this level -- do not apply the (already
+                # computed) step past the tolerance; keep v as-is.
+                break
+            v = stats.v_new
+            prev_gnorm = gnorm
+            total_matvecs += int(stats.pcg_iters)
+            total_iters += 1
+            if total_iters >= gn.max_newton:
+                break
+        if total_iters >= gn.max_newton:
+            break
+
+    rel_final = (
+        gnorm_last / gnorm0_global if (gnorm0_global and gnorm0_global > 0) else 0.0
+    )
+    return GNResult(
+        v=v,
+        iters=total_iters,
+        matvecs=total_matvecs,
+        gnorm0=gnorm0_global or 0.0,
+        gnorm=gnorm_last or 0.0,
+        rel_grad=rel_final,
+        converged=rel_final <= gn.tol_rel_grad,
+        history=history,
+        wall_time_s=time.perf_counter() - t0,
+    )

@@ -1,0 +1,64 @@
+"""Reduced gradient (3):  g(v) = beta*A v + int_0^1 lambda grad(m) dt.
+
+Evaluating g requires one state solve (forward) and one adjoint solve
+(backward); the trajectories are reused by the caller (objective value,
+Hessian matvecs at the same iterate).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import derivatives as _deriv
+from . import spectral as _spec
+from . import transport as _tr
+
+
+class GradientState(NamedTuple):
+    """Everything computed while evaluating g(v) that later stages reuse."""
+
+    g: jnp.ndarray          # reduced gradient (3, N1,N2,N3)
+    m_traj: jnp.ndarray     # state trajectory (Nt+1, N1,N2,N3)
+    lam_traj: jnp.ndarray   # adjoint trajectory (Nt+1, N1,N2,N3)
+    foot_fwd: jnp.ndarray   # footpoints for forward solves
+    foot_adj: jnp.ndarray   # footpoints for backward solves
+    divv: jnp.ndarray       # div v (FD8/FFT per config)
+    j_mismatch: jnp.ndarray
+    j_reg: jnp.ndarray
+
+
+def evaluate(
+    m0: jnp.ndarray,
+    m1: jnp.ndarray,
+    v: jnp.ndarray,
+    beta: float,
+    gamma: float,
+    cfg: _tr.TransportConfig,
+) -> GradientState:
+    foot_fwd = _tr.footpoints(v, cfg, sign=1.0)
+    foot_adj = _tr.footpoints(v, cfg, sign=-1.0)
+    divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend)
+
+    m_traj = _tr.solve_state(m0, v, cfg, foot=foot_fwd)
+    lam1 = m1 - m_traj[-1]
+    lam_traj = _tr.solve_adjoint(lam1, v, cfg, foot_adj=foot_adj, divv=divv)
+
+    body = _tr.body_force(lam_traj, m_traj, cfg)
+    g = _spec.apply_regop(v, beta, gamma) + body
+
+    from . import grid as _grid
+
+    j_mis = 0.5 * _grid.inner(lam1, lam1)
+    j_reg = _spec.reg_energy(v, beta, gamma)
+    return GradientState(
+        g=g,
+        m_traj=m_traj,
+        lam_traj=lam_traj,
+        foot_fwd=foot_fwd,
+        foot_adj=foot_adj,
+        divv=divv,
+        j_mismatch=j_mis,
+        j_reg=j_reg,
+    )

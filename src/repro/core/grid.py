@@ -1,0 +1,89 @@
+"""Periodic grid utilities for the registration solver.
+
+The computational domain follows CLAIRE: Omega = (0, 2*pi)^3 with periodic
+boundary conditions, discretized with N = (N1, N2, N3) equispaced nodes
+x_ijk = (i*h1, j*h2, k*h3), h_i = 2*pi / N_i.
+
+Conventions used throughout ``repro.core``:
+  * scalar fields  : arrays of shape ``(N1, N2, N3)``
+  * vector fields  : arrays of shape ``(3, N1, N2, N3)`` (component-major)
+  * query points   : arrays of shape ``(3, ...)`` in *index units* (x / h)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+TWO_PI = 2.0 * math.pi
+
+
+def spacing(shape: Sequence[int]) -> Tuple[float, float, float]:
+    """Grid spacing h_i = 2*pi / N_i."""
+    return tuple(TWO_PI / float(n) for n in shape)
+
+
+def cell_volume(shape: Sequence[int]) -> float:
+    h = spacing(shape)
+    return h[0] * h[1] * h[2]
+
+
+def coords(shape: Sequence[int], dtype=jnp.float32) -> jnp.ndarray:
+    """Physical coordinates, shape (3, N1, N2, N3)."""
+    h = spacing(shape)
+    axes = [jnp.arange(n, dtype=dtype) * h[i] for i, n in enumerate(shape)]
+    grids = jnp.meshgrid(*axes, indexing="ij")
+    return jnp.stack(grids, axis=0)
+
+
+def index_coords(shape: Sequence[int], dtype=jnp.float32) -> jnp.ndarray:
+    """Index-unit coordinates, shape (3, N1, N2, N3)."""
+    axes = [jnp.arange(n, dtype=dtype) for n in shape]
+    grids = jnp.meshgrid(*axes, indexing="ij")
+    return jnp.stack(grids, axis=0)
+
+
+def inner(a: jnp.ndarray, b: jnp.ndarray, shape: Sequence[int] | None = None) -> jnp.ndarray:
+    """Discrete L2 inner product with quadrature weight h1*h2*h3.
+
+    Works for scalar or vector fields (sums over all axes).
+    """
+    if shape is None:
+        shape = a.shape[-3:]
+    w = cell_volume(shape)
+    return w * jnp.sum(a * b)
+
+
+def norm_l2(a: jnp.ndarray, shape: Sequence[int] | None = None) -> jnp.ndarray:
+    return jnp.sqrt(inner(a, a, shape))
+
+
+def wavenumbers(shape: Sequence[int], dtype=jnp.float32, rfft: bool = True):
+    """Integer wavenumbers (domain length 2*pi => k are integers).
+
+    Returns (k1, k2, k3) broadcastable to the (r)fft output shape.
+    If ``rfft`` the last axis uses rfft frequencies.
+    """
+    n1, n2, n3 = shape
+    k1 = jnp.fft.fftfreq(n1, d=1.0 / n1).astype(dtype).reshape(n1, 1, 1)
+    k2 = jnp.fft.fftfreq(n2, d=1.0 / n2).astype(dtype).reshape(1, n2, 1)
+    if rfft:
+        k3 = jnp.fft.rfftfreq(n3, d=1.0 / n3).astype(dtype).reshape(1, 1, n3 // 2 + 1)
+    else:
+        k3 = jnp.fft.fftfreq(n3, d=1.0 / n3).astype(dtype).reshape(1, 1, n3)
+    return k1, k2, k3
+
+
+def zero_nyquist_mask(shape: Sequence[int], dtype=jnp.float32, rfft: bool = True):
+    """Mask that zeroes the Nyquist modes (needed for odd-order spectral
+    derivatives on even grids; the i*k_nyq mode is sign-ambiguous)."""
+    n1, n2, n3 = shape
+    k1, k2, k3 = wavenumbers(shape, dtype=dtype, rfft=rfft)
+    m1 = jnp.where((n1 % 2 == 0) & (jnp.abs(k1) == n1 // 2), 0.0, 1.0)
+    m2 = jnp.where((n2 % 2 == 0) & (jnp.abs(k2) == n2 // 2), 0.0, 1.0)
+    m3 = jnp.where((n3 % 2 == 0) & (jnp.abs(k3) == n3 // 2), 0.0, 1.0)
+    return m1, m2, m3

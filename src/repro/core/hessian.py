@@ -1,0 +1,34 @@
+"""Gauss-Newton Hessian matvec:
+
+    H vt = beta*A vt + int_0^1 lt grad(m) dt,
+
+where (per Algorithm 2.1)
+    inc. state  :  d mt/dt + v.grad mt + vt.grad m = 0,  mt(0) = 0
+    inc. adjoint: -d lt/dt - div(lt v) = 0,              lt(1) = -mt(1).
+
+The matvec reuses the state trajectory, the footpoints and div(v) computed
+during the gradient evaluation (``GradientState``), so each matvec costs two
+transport solves — exactly the paper's Table 1 accounting.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import gradient as _grad
+from . import spectral as _spec
+from . import transport as _tr
+
+
+def matvec(
+    vt: jnp.ndarray,
+    gs: _grad.GradientState,
+    v: jnp.ndarray,
+    beta: float,
+    gamma: float,
+    cfg: _tr.TransportConfig,
+) -> jnp.ndarray:
+    mt1 = _tr.solve_inc_state(vt, v, gs.m_traj, cfg, foot=gs.foot_fwd)
+    lt_traj = _tr.solve_inc_adjoint(mt1, v, cfg, foot_adj=gs.foot_adj, divv=gs.divv)
+    body = _tr.body_force(lt_traj, gs.m_traj, cfg)
+    return _spec.apply_regop(vt, beta, gamma) + body

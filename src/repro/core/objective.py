@@ -1,0 +1,34 @@
+"""Objective functional (1a): squared-L2 mismatch + H1-div regularization."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import grid as _grid
+from . import spectral as _spec
+from . import transport as _tr
+
+
+def mismatch(m_final: jnp.ndarray, m1: jnp.ndarray) -> jnp.ndarray:
+    """0.5 * || m(.,1) - m1 ||_L2^2."""
+    r = m_final - m1
+    return 0.5 * _grid.inner(r, r)
+
+
+def relative_mismatch(m_final: jnp.ndarray, m1: jnp.ndarray, m0: jnp.ndarray) -> jnp.ndarray:
+    """The paper's reported metric: ||m(.,1)-m1||_2 / ||m1 - m0||_2."""
+    return _grid.norm_l2(m_final - m1) / _grid.norm_l2(m1 - m0)
+
+
+def objective(
+    m0: jnp.ndarray,
+    m1: jnp.ndarray,
+    v: jnp.ndarray,
+    beta: float,
+    gamma: float,
+    cfg: _tr.TransportConfig,
+    foot: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """J(v) per eq. (1a); solves the state equation internally."""
+    m_traj = _tr.solve_state(m0, v, cfg, foot=foot)
+    return mismatch(m_traj[-1], m1) + _spec.reg_energy(v, beta, gamma)

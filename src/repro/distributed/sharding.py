@@ -1,0 +1,274 @@
+"""Divisibility-aware sharding rules.
+
+Parameters (memory-driven, Megatron-style TP pairing):
+  * embedding / unembedding tables (V, D)     -> vocab over ``model``
+  * MoE expert tensors (rep, E, D, F)         -> expert over ``model``
+  * column weights  gate/up/wq/wk/wv/in_proj  -> last dim over ``model``
+  * row weights     down/wo/out_proj          -> first non-stack dim over ``model``
+  * 0/1-D leaves (norms, biases, A_log, ...)  -> replicated
+Every rule checks divisibility against the mesh axis size and falls back to
+replication — JAX rejects non-divisible shardings, so rules must be total.
+
+Optimizer state (ZeRO-1): parameter spec + the largest remaining unsharded
+dim additionally sharded over the data-parallel axes.
+
+Activations: residual stream (B, S, D) -> (dp, "model", None) — batch over
+(pod, data), sequence over ``model`` (sequence parallelism); logits
+(B, S, V) -> (dp, None, "model") (vocab-parallel cross entropy).
+
+Caches: KV (rep, B, S, KV, hd) -> batch over dp when divisible, S over
+``model``; SSM states -> batch over dp, heads/width over ``model``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axis_names
+
+#: parameter-name classes
+_COLUMN = ("gate", "up", "wq", "wk", "wv", "in_proj")
+_ROW = ("down", "wo", "out_proj")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _shard_dim(shape, dim: int, size: int) -> bool:
+    return shape[dim] % size == 0 and shape[dim] >= size
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (see module docstring)."""
+    msize = axis_size(mesh, "model")
+    if msize == 1 or len(shape) <= 1:
+        return P()
+    spec = [None] * len(shape)
+
+    leaf = path.rsplit("/", 1)[-1]
+    parent = path.rsplit("/", 2)[-2] if path.count("/") >= 1 else ""
+
+    # embeddings: (V, D)
+    if leaf == "table":
+        if _shard_dim(shape, 0, msize):
+            spec[0] = "model"
+        return P(*spec)
+
+    # MoE experts: raw arrays named gate/up/down with an expert dim
+    # (rep, E, D, F) / (E, D, F) — identified by ndim >= 3 + column/row name
+    if leaf in ("gate", "up", "down") and len(shape) >= 3 and parent == "mlp":
+        e_dim = len(shape) - 3
+        if _shard_dim(shape, e_dim, msize):
+            spec[e_dim] = "model"
+            return P(*spec)
+
+    if leaf == "w":
+        kind = path.rsplit("/", 2)[-2]  # wq/wk/wv/wo/gate/up/down/...
+    else:
+        kind = leaf
+
+    if kind in _COLUMN:
+        if _shard_dim(shape, len(shape) - 1, msize):
+            spec[-1] = "model"
+            return P(*spec)
+    if kind in _ROW:
+        dim = len(shape) - 2
+        if dim >= 0 and _shard_dim(shape, dim, msize):
+            spec[dim] = "model"
+            return P(*spec)
+
+    # fallback: shard the largest divisible dim (skip a small leading stack
+    # dim), else replicate
+    dims = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for d in dims:
+        if shape[d] >= 4 * msize and _shard_dim(shape, d, msize):
+            spec[d] = "model"
+            return P(*spec)
+    return P(*spec)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Optimizer-state spec: param spec + dp sharding on the largest free dim."""
+    dp = dp_axis_names(mesh)
+    dsize = axis_size(mesh, dp)
+    if dsize == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    free = [d for d in range(len(shape)) if entries[d] is None]
+    free.sort(key=lambda d: -shape[d])
+    for d in free:
+        if shape[d] % dsize == 0 and shape[d] >= dsize:
+            entries[d] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*entries)
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpecs mirroring a param pytree (abstract or real)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.shape, mesh), params)
+
+
+def opt_specs(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: zero1_spec(
+            param_spec(_path_str(path), leaf.shape, mesh), leaf.shape, mesh),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# Batches, activations, caches
+# ---------------------------------------------------------------------------
+
+
+def _dp_entry(mesh: Mesh, batch: int):
+    dp = dp_axis_names(mesh)
+    if not dp:
+        return None
+    dsize = axis_size(mesh, dp)
+    if batch % dsize == 0 and batch >= dsize:
+        return dp if len(dp) > 1 else dp[0]
+    # try the inner data axis alone (multi-pod with tiny batch)
+    if "data" in dp and batch % mesh.shape["data"] == 0 and batch >= mesh.shape["data"]:
+        return "data"
+    return None
+
+
+def _seq_entry(mesh: Mesh, seq: int):
+    msize = axis_size(mesh, "model")
+    if msize > 1 and seq % msize == 0 and seq >= msize:
+        return "model"
+    return None
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Specs for a train/prefill batch dict: dim0 = batch, dim1 = seq."""
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        spec[0] = _dp_entry(mesh, leaf.shape[0])
+        if len(leaf.shape) >= 2:
+            spec[1] = _seq_entry(mesh, leaf.shape[1])
+        return P(*spec)
+
+    return jax.tree.map(one, batch_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cache_specs(cache_tree, mesh: Mesh):
+    """Decode-cache specs. Leaves are per-layer buffers:
+    KV (B, S, KV, hd) — seq over ``model``; SSM state (B, H, P, N) — heads
+    over ``model``; SSM conv (B, K, W) — channel width over ``model``;
+    batch over the data axes everywhere it divides.
+    """
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        spec[0] = _dp_entry(mesh, shape[0])
+        if len(shape) == 4:
+            # dim1 is seq (KV cache) or heads (SSM state) — both shard
+            spec[1] = _seq_entry(mesh, shape[1])
+        elif len(shape) == 3:
+            # SSM conv buffer (B, K, W): shard the channel width
+            spec[2] = _seq_entry(mesh, shape[2])
+        return P(*spec)
+
+    return jax.tree.map(one, cache_tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+#: §Perf experiment knob: sequence-shard the residual stream at segment
+#: boundaries (default) or keep it batch-sharded only (Megatron-classic).
+#: Toggled via REPRO_RESIDUAL_SEQ=0 by the dry-run A/B harness.
+import os  # noqa: E402
+
+RESIDUAL_SEQ_SHARD = os.environ.get("REPRO_RESIDUAL_SEQ", "1") != "0"
+
+
+def residual_constraint(mesh: Mesh):
+    """Sharding hook for the residual stream at segment boundaries."""
+
+    def constrain(x):
+        b, s = x.shape[0], x.shape[1]
+        seq = _seq_entry(mesh, s) if RESIDUAL_SEQ_SHARD else None
+        spec = P(_dp_entry(mesh, b), seq, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def qkv_constraint(mesh: Mesh):
+    """Attention parallelism selection (train/prefill):
+
+      KV heads divisible by the model axis  -> head-parallel (Megatron):
+          q, k, v sharded on the KV-head dim; sequence gathered.
+      otherwise                              -> sequence-parallel:
+          q sharded on seq; k, v replicated (gathered ONCE per layer, not
+          once per query block).
+    """
+    msize = axis_size(mesh, "model")
+
+    def constrain(q, k, v):
+        b, _, kvh, _ = k.shape
+        dp = _dp_entry(mesh, b)
+        if msize > 1 and kvh % msize == 0 and kvh >= msize:
+            kspec = P(dp, None, "model", None)
+            qspec = P(dp, None, "model", None, None)
+        else:
+            kspec = P(dp, None, None, None)
+            qspec = P(dp, _seq_entry(mesh, q.shape[1]), None, None, None)
+        q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qspec))
+        k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, kspec))
+        v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, kspec))
+        return q, k, v
+
+    return constrain
+
+
+def ssm_inner_constraint(mesh: Mesh):
+    """SSM inner width over the model axis; sequence stays local."""
+    msize = axis_size(mesh, "model")
+
+    def constrain(x):
+        w = "model" if (msize > 1 and x.shape[-1] % msize == 0) else None
+        spec = P(_dp_entry(mesh, x.shape[0]), None, w)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def expert_constraint(mesh: Mesh):
+    """Sharding hook for dispatched MoE tensors (E, G, C, D/F)."""
+    msize = axis_size(mesh, "model")
+
+    def constrain(x):
+        e = "model" if (msize > 1 and x.shape[0] % msize == 0) else None
+        g = _dp_entry(mesh, x.shape[1])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(e, g, None, None)))
+
+    return constrain
+
+
+def logits_spec(mesh: Mesh, batch: int, vocab: int) -> P:
+    msize = axis_size(mesh, "model")
+    v_entry = "model" if (msize > 1 and vocab % msize == 0) else None
+    return P(_dp_entry(mesh, batch), None, v_entry)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's two hot-spot operations:
+
+  fd8/        8th-order finite-difference first derivatives (pencil stencil)
+  prefilter/  cubic B-spline 15-point prefilter (pencil stencil)
+  interp3d/   scattered-data interpolation (halo-tile gather)
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrappers) and ref.py (pure-jnp oracle). Validated with interpret=True.
+"""

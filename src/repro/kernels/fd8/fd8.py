@@ -1,0 +1,30 @@
+"""FD8 Pallas pencil kernel: 8th-order central first derivative, periodic.
+
+The paper's second computational kernel (§2.3.2): replaces FFT spectral
+first derivatives with an 8th-order central difference. The CUDA version
+loads a 2D shared-memory tile + halo; the TPU adaptation keeps the
+differentiation axis whole in VMEM (pencil), making the periodic halo a
+static in-register roll. See ``repro.kernels.pencil`` for the blocking.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels import pencil as _pencil
+
+# f'(x_i) ~ (1/h) sum_{k=1..4} c_k (f_{i+k} - f_{i-k})
+FD8_COEFFS = (4.0 / 5.0, -1.0 / 5.0, 4.0 / 105.0, -1.0 / 280.0)
+
+TWO_PI = 2.0 * math.pi
+
+
+def fd8_partial_pallas(f: jnp.ndarray, axis: int, interpret: bool | None = None
+                       ) -> jnp.ndarray:
+    """d f / d x_axis on the periodic CLAIRE grid (h = 2*pi / N_axis)."""
+    h = TWO_PI / f.shape[axis]
+    return _pencil.stencil_pencil(
+        f, axis, FD8_COEFFS, symmetric=False, scale=1.0 / h, interpret=interpret
+    )

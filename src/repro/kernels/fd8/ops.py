@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the FD8 Pallas kernel.
+
+These are the functions ``repro.core.derivatives`` dispatches to when
+``backend="pallas"`` is selected.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .fd8 import fd8_partial_pallas
+
+
+@partial(jax.jit, static_argnames=("axis", "interpret"))
+def fd8_partial(f: jnp.ndarray, axis: int, interpret: bool | None = None) -> jnp.ndarray:
+    return fd8_partial_pallas(f, axis, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fd8_grad(f: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Gradient of a scalar field -> (3, N1, N2, N3)."""
+    return jnp.stack(
+        [fd8_partial_pallas(f, a, interpret=interpret) for a in range(3)], axis=0
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fd8_div(w: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Divergence of a vector field (3, N1, N2, N3) -> (N1, N2, N3)."""
+    return sum(fd8_partial_pallas(w[a], a, interpret=interpret) for a in range(3))

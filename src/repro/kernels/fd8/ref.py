@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the FD8 kernel (periodic rolls)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .fd8 import FD8_COEFFS
+
+TWO_PI = 2.0 * math.pi
+
+
+def fd8_partial(f: jnp.ndarray, axis: int) -> jnp.ndarray:
+    h = TWO_PI / f.shape[axis]
+    out = jnp.zeros_like(f)
+    for k, c in enumerate(FD8_COEFFS, start=1):
+        out = out + c * (jnp.roll(f, -k, axis=axis) - jnp.roll(f, k, axis=axis))
+    return out / h
+
+
+def fd8_grad(f: jnp.ndarray) -> jnp.ndarray:
+    return jnp.stack([fd8_partial(f, a) for a in range(3)], axis=0)
+
+
+def fd8_div(w: jnp.ndarray) -> jnp.ndarray:
+    return sum(fd8_partial(w[a], a) for a in range(3))

@@ -1,0 +1,19 @@
+"""Jit'd wrappers for the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flashattn import flash_attention_pallas, hbm_traffic_model  # noqa: F401
+
+
+@partial(jax.jit, static_argnames=("causal", "q_block", "kv_chunk",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = False, q_block: int = 512,
+                    kv_chunk: int = 512, interpret=None):
+    """(BH, S, hd) MHA flash attention; scores never leave VMEM."""
+    return flash_attention_pallas(q, k, v, causal=causal, q_block=q_block,
+                                  kv_chunk=kv_chunk, interpret=interpret)

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the interp3d Pallas kernel.
+
+``interp_linear`` / ``interp_cubic_bspline`` / ``interp_cubic_lagrange``
+mirror the variants of the paper (GPU-TXTLIN / GPU-TXTSPL / GPU-LAG); the
+B-spline path chains the prefilter kernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prefilter.ops import prefilter3d
+from .interp3d import interp3d_pallas
+
+
+@partial(jax.jit, static_argnames=("displacement_bound", "interpret"))
+def interp_linear(f, q, displacement_bound: int = 6, interpret=None):
+    return interp3d_pallas(f, q, basis="linear",
+                           displacement_bound=displacement_bound,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("displacement_bound", "interpret"))
+def interp_cubic_lagrange(f, q, displacement_bound: int = 6, interpret=None):
+    return interp3d_pallas(f, q, basis="cubic_lagrange",
+                           displacement_bound=displacement_bound,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("displacement_bound", "prefiltered", "interpret"))
+def interp_cubic_bspline(f, q, displacement_bound: int = 6,
+                         prefiltered: bool = False, interpret=None):
+    if not prefiltered:
+        f = prefilter3d(f, interpret=interpret)
+    return interp3d_pallas(f, q, basis="cubic_bspline",
+                           displacement_bound=displacement_bound,
+                           interpret=interpret)

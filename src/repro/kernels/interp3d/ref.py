@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the interp3d kernel: global periodic gather (no
+tiling) with the same basis polynomials."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.prefilter import ref as _pref_ref
+from .interp3d import _BASES
+
+
+def _gather(f_flat, shape, i1, i2, i3):
+    n1, n2, n3 = shape
+    idx = jnp.mod(i1, n1) * (n2 * n3) + jnp.mod(i2, n2) * n3 + jnp.mod(i3, n3)
+    return jnp.take(f_flat, idx)
+
+
+def interp3d(f, q, basis: str = "cubic_bspline"):
+    weight_fn, support, base_off = _BASES[basis]
+    shape = f.shape
+    qf = jnp.floor(q)
+    t = q - qf
+    base = qf.astype(jnp.int32) + base_off
+    w1, w2, w3 = weight_fn(t[0]), weight_fn(t[1]), weight_fn(t[2])
+    f_flat = f.reshape(-1)
+    acc = jnp.zeros(q.shape[1:], dtype=jnp.float32)
+    for a in range(support):
+        for b in range(support):
+            wab = w1[a] * w2[b]
+            for c in range(support):
+                vals = _gather(f_flat, shape, base[0] + a, base[1] + b, base[2] + c)
+                acc = acc + wab * w3[c] * vals
+    return acc.astype(f.dtype)
+
+
+def interp_linear(f, q):
+    return interp3d(f, q, "linear")
+
+
+def interp_cubic_lagrange(f, q):
+    return interp3d(f, q, "cubic_lagrange")
+
+
+def interp_cubic_bspline(f, q, prefiltered: bool = False):
+    if not prefiltered:
+        f = _pref_ref.prefilter3d(f)
+    return interp3d(f, q, "cubic_bspline")

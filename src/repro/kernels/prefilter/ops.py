@@ -1,0 +1,21 @@
+"""Jit'd public wrappers for the B-spline prefilter Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .prefilter import prefilter3d_pallas, prefilter_axis_pallas
+
+
+@partial(jax.jit, static_argnames=("axis", "interpret"))
+def prefilter_axis(f: jnp.ndarray, axis: int, interpret: bool | None = None):
+    return prefilter_axis_pallas(f, axis, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def prefilter3d(f: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """B-spline interpolation coefficients c with B c = f (truncated FIR)."""
+    return prefilter3d_pallas(f, interpret=interpret)

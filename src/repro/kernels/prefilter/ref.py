@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the prefilter kernel: periodic FIR rolls, plus the
+exact spectral inverse (the ground truth the FIR truncation approximates)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .prefilter import PREFILTER_TAPS, RADIUS
+
+
+def prefilter_axis(f: jnp.ndarray, axis: int) -> jnp.ndarray:
+    acc = PREFILTER_TAPS[0] * f
+    for k in range(1, RADIUS + 1):
+        c = PREFILTER_TAPS[k]
+        acc = acc + c * (jnp.roll(f, -k, axis=axis) + jnp.roll(f, k, axis=axis))
+    return acc
+
+
+def prefilter3d(f: jnp.ndarray) -> jnp.ndarray:
+    out = f
+    for axis in range(3):
+        out = prefilter_axis(out, axis)
+    return out
+
+
+def prefilter3d_exact(f: jnp.ndarray) -> jnp.ndarray:
+    """Exact periodic prefilter: spectral division by the B-spline symbol
+    (4 + 2 cos(2 pi k / N)) / 6 per axis."""
+    shape = f.shape
+    syms = []
+    for n in shape:
+        k = np.fft.fftfreq(n, d=1.0 / n)
+        syms.append((4.0 + 2.0 * np.cos(2.0 * np.pi * k / n)) / 6.0)
+    s1 = jnp.asarray(syms[0], dtype=jnp.float32).reshape(-1, 1, 1)
+    s2 = jnp.asarray(syms[1], dtype=jnp.float32).reshape(1, -1, 1)
+    s3 = jnp.asarray(syms[2][: shape[2] // 2 + 1], dtype=jnp.float32).reshape(1, 1, -1)
+    fh = jnp.fft.rfftn(f)
+    return jnp.fft.irfftn(fh / (s1 * s2 * s3), s=shape).astype(f.dtype)

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch smollm-135m --smoke --steps 20
+    python -m repro.launch.train --arch qwen2-7b --mesh-shape 16,16  # on a pod
+
+``--smoke`` runs the reduced config on the host devices (CI / this
+container); the full config targets the production mesh. Checkpoints,
+preemption handling and straggler accounting come from ``Trainer``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.tokens import SyntheticTokens
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on host devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. '16,16' (axes data,model); default: 1-device")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+
+    if args.multi_pod or args.mesh_shape == "production":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.mesh_shape:
+        shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = ("data", "model")[: len(shape)]
+        mesh = make_mesh(shape, axes)
+    else:
+        mesh = make_mesh((1, 1), ("data", "model"))
+
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 10, 1))
+    trainer = Trainer(model, mesh, TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, log_every=max(args.steps // 10, 1),
+        opt=opt))
+
+    stream = SyntheticTokens(cfg.vocab_size, args.seq, args.batch)
+
+    def batches():
+        import jax.numpy as jnp
+        for tokens, targets in stream:
+            yield {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
+
+    state = trainer.run(batches())
+    print(f"[train] done at step {int(state.opt['step'])}; "
+          f"stragglers={trainer.straggler_steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""LM model substrate: the assigned-architecture pool.
+
+Families: dense decoder-only (llama/qwen-style), MoE (GShard-style top-k
+dispatch), SSM (Mamba2/SSD), hybrid (Jamba), encoder-decoder (Whisper
+backbone), VLM (ViT-stub + LM backbone).
+
+Everything is pure-functional JAX: ``build_model(cfg)`` returns a ``Model``
+with abstract init (ShapeDtypeStructs for the dry-run), real init (smoke
+tests), forward/loss, prefill and decode entry points, and PartitionSpec
+pytrees for every mesh we deploy on.
+"""
+
+from .api import Model, build_model  # noqa: F401

@@ -1,0 +1,253 @@
+"""Model facade: one object per architecture config with init / loss /
+prefill / decode entry points and abstract (ShapeDtypeStruct) variants of
+everything — the dry-run lowers against the abstract forms, smoke tests run
+the concrete ones.
+
+Batch layouts (all int32 tokens, bf16 float inputs):
+  LM family : {"tokens": (B,S), "targets": (B,S)}
+  encdec    : {"frames": (B,S,D), "tokens": (B,S/r), "targets": (B,S/r)}
+  vlm       : {"patches": (B,P,D), "tokens": (B,S-P), "targets": (B,S-P)}
+Decode     : tokens (B,1) + cache pytree + scalar position.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import ssm as S
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+MOE_AUX_COEFF = 0.01
+
+
+def _sinusoidal(seq: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return pe[:, :d].astype(dtype)
+
+
+def _sinusoidal_at(position, d: int, dtype) -> jnp.ndarray:
+    """Sinusoidal encoding of one (possibly traced) position -> (d,)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = position.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return pe[:d].astype(dtype)
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.param_dtype = L.dtype_of(cfg.param_dtype)
+        self.compute_dtype = L.dtype_of(cfg.compute_dtype)
+        #: optional residual-stream sharding hook, set by the launcher
+        self.constraint: Optional[Callable] = None
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = self.param_dtype
+        ks = jax.random.split(rng, 6)
+        p: Params = {
+            "embed": L.make_embedding(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+            "final_norm": (L.make_norm if cfg.rmsnorm else L.make_layernorm)(
+                cfg.d_model, dt),
+            "decoder": T.make_stack(ks[1], cfg, dt, cross=cfg.is_encdec),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.make_embedding(ks[2], cfg.vocab_padded, cfg.d_model, dt)
+        if cfg.is_encdec:
+            enc_cfg = cfg  # same width; n_enc_layers handled via segments arg
+            p["encoder"] = self._make_encoder(ks[3], dt)
+            p["enc_norm"] = (L.make_norm if cfg.rmsnorm else L.make_layernorm)(
+                cfg.d_model, dt)
+        return p
+
+    def _make_encoder(self, key, dt) -> Params:
+        """Encoder stack: n_enc_layers of non-causal (attn, dense) layers."""
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_enc_layers)
+        per = [
+            {"sub0": T.make_sublayer(k, cfg, ("attn", "dense"), dt)}
+            for k in keys
+        ]
+        return {"seg0": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    # forward pieces
+    # ------------------------------------------------------------------
+
+    def _encode(self, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames.astype(self.compute_dtype)
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, self.compute_dtype)[None]
+
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a = T.sublayer_apply(layer_p["sub0"], cfg, ("attn", "dense"), h,
+                                    self.compute_dtype, causal=False)
+            if self.constraint is not None:
+                h = self.constraint(h)
+            return (h, aux + a), None
+
+        (x, _), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (x, jnp.zeros((), jnp.float32)),
+                                 params["encoder"]["seg0"])
+        return L.norm_apply(params["enc_norm"], x, cfg.norm_eps,
+                            self.compute_dtype)
+
+    def _embed_inputs(self, params: Params, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], self.compute_dtype)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(self.compute_dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        if cfg.is_encdec:
+            x = x + _sinusoidal(x.shape[1], cfg.d_model, self.compute_dtype)[None]
+        return x
+
+    def _backbone(self, params: Params, x, enc_states=None):
+        return T.stack_apply(params["decoder"], self.cfg, x, self.compute_dtype,
+                             causal=True, enc_states=enc_states,
+                             constraint=self.constraint)
+
+    def _logits(self, params: Params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        x = L.norm_apply(params["final_norm"], x, cfg.norm_eps, self.compute_dtype)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["unembed"]["table"])
+        return L.unembed(table, x, self.compute_dtype)
+
+    # ------------------------------------------------------------------
+    # public: loss / prefill / decode
+    # ------------------------------------------------------------------
+
+    def loss(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        enc = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+        x = self._embed_inputs(params, batch)
+        x, aux = self._backbone(params, x, enc_states=enc)
+        if cfg.family == "vlm":  # loss over the text positions only
+            x = x[:, batch["patches"].shape[1]:]
+        logits = self._logits(params, x)
+        xent = L.softmax_xent(logits, batch["targets"], cfg.vocab_size)
+        total = xent + MOE_AUX_COEFF * aux
+        return total, {"xent": xent, "aux": aux}
+
+    def prefill(self, params: Params, batch: Dict) -> jnp.ndarray:
+        """Forward over the prompt; returns last-position logits. (The KV
+        write-out is part of the decode-cache cost model; see DESIGN.md.)"""
+        cfg = self.cfg
+        enc = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+        x = self._embed_inputs(params, batch)
+        x, _ = self._backbone(params, x, enc_states=enc)
+        return self._logits(params, x[:, -1:])
+
+    def decode_step(self, params: Params, cache: Params, tokens: jnp.ndarray,
+                    position: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, self.compute_dtype)
+        if cfg.is_encdec:
+            pe = _sinusoidal_at(position, cfg.d_model, self.compute_dtype)
+            x = x + pe[None, None, :]
+        x, new_cache = T.stack_decode(params["decoder"], cfg, x, cache,
+                                      position, self.compute_dtype,
+                                      has_cross=cfg.is_encdec)
+        return self._logits(params, x), new_cache
+
+    # ------------------------------------------------------------------
+    # abstract inputs (dry-run)
+    # ------------------------------------------------------------------
+
+    def dec_len(self, seq: int) -> int:
+        return max(seq // self.cfg.dec_ratio, 16)
+
+    def text_len(self, seq: int) -> int:
+        if self.cfg.family == "vlm":
+            return seq - self.cfg.n_patches
+        return seq
+
+    def input_specs(self, shape_cfg) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of one cell."""
+        cfg = self.cfg
+        b, s = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        sds = jax.ShapeDtypeStruct
+        kind = shape_cfg.kind
+
+        if kind in ("train", "prefill"):
+            if cfg.is_encdec:
+                d = self.dec_len(s)
+                batch = {"frames": sds((b, s, cfg.d_model), bf16),
+                         "tokens": sds((b, d), i32)}
+                if kind == "train":
+                    batch["targets"] = sds((b, d), i32)
+            elif cfg.family == "vlm":
+                t = self.text_len(s)
+                batch = {"patches": sds((b, cfg.n_patches, cfg.d_model), bf16),
+                         "tokens": sds((b, t), i32)}
+                if kind == "train":
+                    batch["targets"] = sds((b, t), i32)
+            else:
+                batch = {"tokens": sds((b, s), i32)}
+                if kind == "train":
+                    batch["targets"] = sds((b, s), i32)
+            return {"batch": batch}
+
+        # decode: one new token against a seq_len cache
+        cache = self.abstract_cache(b, s)
+        return {
+            "cache": cache,
+            "tokens": sds((b, 1), i32),
+            "position": sds((), i32),
+        }
+
+    def abstract_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return T.make_stack_cache(cfg, batch, self.dec_len(seq),
+                                      cross_seq=seq, abstract=True)
+        return T.make_stack_cache(cfg, batch, seq, abstract=True)
+
+    def make_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return T.make_stack_cache(cfg, batch, self.dec_len(seq),
+                                      cross_seq=seq, abstract=False)
+        return T.make_stack_cache(cfg, batch, seq, abstract=False)
+
+    def make_batch(self, rng, shape_cfg) -> Dict:
+        """Concrete random batch matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape_cfg)
+        k = [rng]
+
+        def mk(s):
+            k[0], sub = jax.random.split(k[0])
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                return jax.random.randint(sub, s.shape, 0, self.cfg.vocab_size,
+                                          dtype=s.dtype)
+            return jax.random.normal(sub, s.shape, dtype=jnp.float32).astype(s.dtype)
+
+        return jax.tree.map(mk, specs,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,278 @@
+"""GQA attention: blockwise (flash-style) training/prefill path, KV-cache
+decode path, and cross-attention (encoder-decoder).
+
+The training/prefill path avoids materializing the (S, S) score matrix:
+a python loop over query blocks (static prefix slices — causal blocks that
+would be fully masked are never computed, so HLO FLOPs track the *useful*
+S^2/2) with an online-softmax ``lax.scan`` over KV chunks inside each block
+(bounds the live score tensor to (B, H, q_block, kv_chunk)).
+
+Layouts:
+  hidden        (B, S, D)
+  q             (B, S, KV, G, hd)   G = n_heads // n_kv_heads
+  k, v          (B, S, KV, hd)
+  decode cache  per layer {"k": (B, S, KV, hd), "v": ...} + scalar position
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+#: Sharding hook applied to (q, k, v) right after projection+RoPE on the
+#: train/prefill path. Set by the launcher: head-parallel attention when the
+#: KV-head count divides the mesh model axis, sequence-parallel otherwise
+#: (without it, GSPMD re-gathers the seq-sharded K/V once per query block —
+#: measured 570 GB/device on whisper train_4k; see EXPERIMENTS.md §Perf).
+_QKV_CONSTRAINT = None
+
+
+def set_qkv_constraint(fn):
+    global _QKV_CONSTRAINT
+    _QKV_CONSTRAINT = fn
+
+
+#: Blockwise-attention tuning knobs (q block, kv chunk, score dtype).
+#: Score tensors are the dominant HBM traffic of long-context prefill
+#: (S^2 * bytes per layer in XLA-land); bf16 scores halve it. f32 remains
+#: the online-softmax accumulator dtype either way.
+_BLOCK_CONFIG = {"q_block": 512, "kv_chunk": 512, "score_dtype": None}
+
+
+def set_block_config(q_block=None, kv_chunk=None, score_dtype="keep"):
+    global _BLOCK_CONFIG
+    if q_block is not None:
+        _BLOCK_CONFIG["q_block"] = q_block
+    if kv_chunk is not None:
+        _BLOCK_CONFIG["kv_chunk"] = kv_chunk
+    if score_dtype != "keep":
+        _BLOCK_CONFIG["score_dtype"] = score_dtype
+
+
+def reset_block_config():
+    global _BLOCK_CONFIG
+    _BLOCK_CONFIG = {"q_block": 512, "kv_chunk": 512, "score_dtype": None}
+
+
+def make_attention(key, cfg, dtype, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.make_dense(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": L.make_dense(ks[1], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": L.make_dense(ks[2], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": L.make_dense(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    return p
+
+
+def _split_heads(x, n_kv, group, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_kv, group, hd)
+
+
+def _qkv(p, cfg, x, kv_x, positions, kv_positions, compute_dtype):
+    hd = cfg.head_dim
+    n_kv = cfg.n_kv_heads
+    group = cfg.n_heads // n_kv
+    q = _split_heads(L.dense(p["wq"], x, compute_dtype), n_kv, group, hd)
+    k = L.dense(p["wk"], kv_x, compute_dtype).reshape(*kv_x.shape[:2], n_kv, hd)
+    v = L.dense(p["wv"], kv_x, compute_dtype).reshape(*kv_x.shape[:2], n_kv, hd)
+    if cfg.use_rope:
+        b, s, _, _, _ = q.shape
+        q = apply_rope_grouped(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_rope_grouped(q, positions, theta):
+    b, s, n_kv, g, hd = q.shape
+    q2 = q.reshape(b, s, n_kv * g, hd)
+    q2 = L.apply_rope(q2, positions, theta)
+    return q2.reshape(b, s, n_kv, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_attend(q_blk, k_ch, v_ch, q_start, kc, causal, scale):
+    """Online-softmax attention of one query block over pre-chunked KV.
+
+    ``k_ch``/``v_ch``: (n_chunks, B, kc, KV, hd) — chunked ONCE per layer by
+    the caller. Chunking inside the per-q-block loop re-materialized (and on
+    CPU, f32-converted) the full KV prefix per block: measured 100 TB/device
+    of copy traffic on whisper prefill_32k (EXPERIMENTS.md §Perf iter 2).
+    """
+    b, bq, n_kv, g, hd = q_blk.shape
+    q_pos = q_start + jnp.arange(bq)
+
+    # Rematerialized (flash-style backward): without checkpoint, AD through
+    # the online-softmax scan stacks the per-chunk probability blocks as
+    # saved residuals — materializing the full S x S attention matrix in the
+    # backward pass, which is exactly what blockwise attention exists to
+    # avoid. Recompute p from the q/k chunks instead.
+    # Big (bq x kc) tensors live in ``sd`` (f32 by default; bf16 under
+    # set_block_config halves the dominant HBM traffic of long prefill);
+    # the online-softmax carries m/l/acc stay f32 regardless.
+    sd = _BLOCK_CONFIG["score_dtype"] or jnp.float32
+    neg = jnp.asarray(-1e30 if sd == jnp.float32 else -3e38, sd)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, c_idx = inp
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk, k_c,
+                       preferred_element_type=sd)
+        s = s * jnp.asarray(scale, sd)
+        if causal:
+            kv_pos = c_idx * kc + jnp.arange(kc)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        p = jnp.exp(s - m_new[..., None].astype(sd))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1).astype(jnp.float32)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v_c.dtype), v_c)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, bq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, bq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, bq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (k_ch, v_ch, jnp.arange(k_ch.shape[0])))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4)  # (b, bq, n_kv, g, hd)
+
+
+def multihead_attention(
+    q, k, v, causal: bool, q_block: int | None = None,
+    kv_chunk: int | None = None,
+):
+    """q: (B,S,KV,G,hd); k,v: (B,S_kv,KV,hd) -> (B,S,KV,G,hd).
+
+    Causal: query block i only ever touches the KV prefix [0, (i+1)*q_block)
+    — fully-masked blocks are never computed.
+    """
+    q_block = q_block or _BLOCK_CONFIG["q_block"]
+    kv_chunk = kv_chunk or _BLOCK_CONFIG["kv_chunk"]
+    b, s, n_kv, g, hd = q.shape
+    s_kv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qb = min(q_block, s)
+    n_q = s // qb if s % qb == 0 else 1
+    if s % qb != 0:
+        qb = s
+        n_q = 1
+    # chunk size must tile both the full KV and each causal prefix
+    kc = min(kv_chunk, qb, s_kv)
+    while s_kv % kc or qb % kc:
+        kc -= 1
+    n_ch_total = s_kv // kc
+
+    # chunk K/V ONCE per layer (not per query block)
+    k_ch_all = k.reshape(b, n_ch_total, kc, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    v_ch_all = v.reshape(b, n_ch_total, kc, n_kv, hd).transpose(1, 0, 2, 3, 4)
+
+    outs = []
+    for i in range(n_q):
+        q_blk = jax.lax.slice_in_dim(q, i * qb, (i + 1) * qb, axis=1)
+        hi = min((i + 1) * qb, s_kv) if causal else s_kv
+        n_ch = max(hi // kc, 1)
+        k_ch = jax.lax.slice_in_dim(k_ch_all, 0, n_ch, axis=0)
+        v_ch = jax.lax.slice_in_dim(v_ch_all, 0, n_ch, axis=0)
+        outs.append(_block_attend(q_blk, k_ch, v_ch, i * qb, kc, causal, scale))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def self_attention(p, cfg, x, compute_dtype, causal=True,
+                   q_block=512, kv_chunk=512):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(p, cfg, x, x, positions, positions, compute_dtype)
+    if _QKV_CONSTRAINT is not None:
+        q, k, v = _QKV_CONSTRAINT(q, k, v)
+    out = multihead_attention(q, k, v, causal, q_block, kv_chunk)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim).astype(compute_dtype)
+    return L.dense(p["wo"], out, compute_dtype)
+
+
+def cross_attention(p, cfg, x, enc_states, compute_dtype):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    enc_pos = jnp.arange(enc_states.shape[1])[None, :]
+    q, k, v = _qkv(p, cfg, x, enc_states, positions, enc_pos, compute_dtype)
+    out = multihead_attention(q, k, v, causal=False)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim).astype(compute_dtype)
+    return L.dense(p["wo"], out, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_abstract(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+def decode_self_attention(p, cfg, x, cache, position, compute_dtype):
+    """x: (B, 1, D); cache k/v: (B, S, KV, hd); position: scalar int.
+
+    Returns (out (B,1,D), new_cache). The new token's K/V overwrite slot
+    ``position`` (ring-buffer semantics for steady-state decode).
+    """
+    b = x.shape[0]
+    hd, n_kv = cfg.head_dim, cfg.n_kv_heads
+    group = cfg.n_heads // n_kv
+    pos = jnp.full((b, 1), position)
+    q, k_new, v_new = _qkv(p, cfg, x, x, pos, pos, compute_dtype)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), position, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), position, axis=1)
+
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache.astype(q.dtype))
+    s = s.astype(jnp.float32) * scale
+    # mask out slots beyond the current position (cache may be part-filled)
+    valid = jnp.arange(k_cache.shape[1]) <= position
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pattn.astype(v_cache.dtype),
+                     v_cache)
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(compute_dtype)
+    return L.dense(p["wo"], out, compute_dtype), {"k": k_cache, "v": v_cache}
+
+
+def decode_cross_attention(p, cfg, x, enc_k, enc_v, compute_dtype):
+    """Cross-attention against precomputed encoder K/V (B, S_enc, KV, hd)."""
+    b = x.shape[0]
+    hd, n_kv = cfg.head_dim, cfg.n_kv_heads
+    pos = jnp.zeros((b, 1), jnp.int32)
+    q = _split_heads(L.dense(p["wq"], x, compute_dtype), n_kv,
+                     cfg.n_heads // n_kv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, enc_k.astype(q.dtype))
+    s = s.astype(jnp.float32) * scale
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pattn.astype(enc_v.dtype), enc_v)
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(compute_dtype)
+    return L.dense(p["wo"], out, compute_dtype)

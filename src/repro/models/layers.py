@@ -1,0 +1,167 @@
+"""Shared neural-net building blocks (pure functional, dict params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions take an rng and
+    return the dict; abstract init returns ShapeDtypeStructs (same tree).
+  * activations run in ``compute_dtype`` (bf16 by default), parameters are
+    stored in ``param_dtype``; reductions (norms, softmax, losses) in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers — all init goes through these so abstract/concrete init share
+# one shape definition.
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def make_dense(key, d_in, d_out, dtype, bias: bool = False,
+               scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def make_norm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def make_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float, compute_dtype) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(compute_dtype)
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float, compute_dtype) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(compute_dtype)
+
+
+def norm_apply(p: Params, x, eps, compute_dtype):
+    if "bias" in p:
+        return layernorm(p, x, eps, compute_dtype)
+    return rmsnorm(p, x, eps, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(key, d_model, d_ff, dtype, act: str = "silu") -> Params:
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU: gate, up, down
+        return {
+            "gate": make_dense(ks[0], d_model, d_ff, dtype),
+            "up": make_dense(ks[1], d_model, d_ff, dtype),
+            "down": make_dense(ks[2], d_ff, d_model, dtype),
+        }
+    return {  # plain 2-matrix MLP (whisper)
+        "up": make_dense(ks[0], d_model, d_ff, dtype, bias=True),
+        "down": make_dense(ks[1], d_ff, d_model, dtype, bias=True),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str, compute_dtype) -> jnp.ndarray:
+    if act == "silu":
+        g = dense(p["gate"], x, compute_dtype)
+        u = dense(p["up"], x, compute_dtype)
+        return dense(p["down"], jax.nn.silu(g) * u, compute_dtype)
+    h = jax.nn.gelu(dense(p["up"], x, compute_dtype))
+    return dense(p["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def make_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": _normal(key, (vocab, d_model), dtype, 0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      table.astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, targets: jnp.ndarray,
+                 vocab_real: int) -> jnp.ndarray:
+    """Mean cross entropy in fp32; padded vocab tail masked out."""
+    logits = logits.astype(jnp.float32)
+    if vocab_real < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab_real
+        mask = jnp.concatenate([
+            jnp.zeros((vocab_real,), jnp.float32),
+            jnp.full((pad,), -1e9, jnp.float32)])
+        logits = logits + mask
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

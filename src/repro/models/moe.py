@@ -1,0 +1,124 @@
+"""Mixture-of-Experts block: GShard-style capacity dispatch, GSPMD-native.
+
+Routing: softmax over all experts, take top-k, renormalize (OLMoE-style).
+Dispatch: tokens are grouped (static group size) and routed into per-expert
+capacity slots via one-hot dispatch/combine einsums — the classic GSPMD MoE
+formulation (no ragged all-to-all; the expert dimension shards cleanly over
+the mesh ``model`` axis). Group size trades dispatch-einsum overhead
+(~ group * k * cf / (3 * d_ff) of FFN FLOPs) against drop rate; 128 keeps
+the overhead ~10% for the worst assigned case (64e top-8).
+
+Shared experts (DeepSeekMoE) are folded into one wide dense MLP — summing
+independent shared experts is exactly a block-diagonal wide MLP.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+GROUP_SIZE = 128
+CAPACITY_FACTOR = 1.25
+
+#: Sharding hook for the dispatched expert tensors (E, G, C, D) — set by the
+#: launcher so the expert dim is pinned to the mesh ``model`` axis. Without
+#: it GSPMD can lose expert parallelism when the group count collapses
+#: (decode: one group -> measured 16x replicated expert compute; see
+#: EXPERIMENTS.md §Dry-run).
+_EXPERT_CONSTRAINT = None
+
+
+def set_expert_constraint(fn):
+    global _EXPERT_CONSTRAINT
+    _EXPERT_CONSTRAINT = fn
+
+
+def _constrain(x):
+    if _EXPERT_CONSTRAINT is not None:
+        return _EXPERT_CONSTRAINT(x)
+    return x
+
+
+def make_moe(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": L.make_dense(ks[0], d, e, dtype),
+        "gate": (scale * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "up": (scale * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "down": ((1.0 / math.sqrt(f)) * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.make_mlp(ks[4], d, cfg.n_shared_experts * cfg.moe_d_ff,
+                                 dtype, act="silu")
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int) -> int:
+    c = int(math.ceil(group * top_k * CAPACITY_FACTOR / n_experts))
+    return max(4 * ((c + 3) // 4), 4)
+
+
+def moe_block(p: Params, cfg, x: jnp.ndarray, compute_dtype
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    group = min(GROUP_SIZE, tokens)
+    n_groups = tokens // group
+    cap = _capacity(group, k, e)
+
+    xg = x.reshape(n_groups, group, d)
+
+    logits = L.dense(p["router"], xg, compute_dtype).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g, s, e)
+    top_p, top_idx = jax.lax.top_k(probs, k)                   # (g, s, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch): e * mean_e(frac_tokens_e * mean_prob_e)
+    onehot_all = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (g, s, k, e)
+    frac = jnp.mean(jnp.sum(onehot_all, axis=2), axis=1)        # (g, e)
+    aux = e * jnp.mean(frac * jnp.mean(probs, axis=1))
+
+    # position of each (token, choice) in its expert's capacity buffer
+    flat_oh = onehot_all.reshape(n_groups, group * k, e)
+    pos = jnp.cumsum(flat_oh, axis=1) - 1.0                    # (g, s*k, e)
+    pos = pos.reshape(n_groups, group, k, e)
+    pos_in_e = jnp.sum(pos * onehot_all, axis=-1)              # (g, s, k)
+    keep = pos_in_e < cap
+
+    # dispatch (g, s, e, c) / combine tensors — built directly in the
+    # compute dtype: the f32 one-hots are the largest activations of an MoE
+    # layer (tokens*e*cap*4B; measured 4.2 GB/tensor on jamba train_4k) and
+    # dispatch masks are exactly representable in bf16.
+    cap_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap,
+                            dtype=compute_dtype)                 # (g, s, k, c)
+    keep_c = keep.astype(compute_dtype)
+    disp = jnp.einsum("gske,gskc->gsec", onehot_all.astype(compute_dtype),
+                      cap_oh * keep_c[..., None])
+    comb = jnp.einsum("gsk,gske,gskc->gsec",
+                      (top_p * keep).astype(compute_dtype),
+                      onehot_all.astype(compute_dtype), cap_oh)
+
+    xin = jnp.einsum("gsec,gsd->egcd", disp,
+                     xg.astype(compute_dtype))                 # (e, g, c, d)
+    xin = _constrain(xin)
+    g_act = jnp.einsum("egcd,edf->egcf", xin, p["gate"].astype(compute_dtype))
+    u_act = jnp.einsum("egcd,edf->egcf", xin, p["up"].astype(compute_dtype))
+    y_e = jnp.einsum("egcf,efd->egcd", jax.nn.silu(g_act) * u_act,
+                     p["down"].astype(compute_dtype))
+    y_e = _constrain(y_e)
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(compute_dtype), y_e)
+
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], xg, "silu", compute_dtype)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

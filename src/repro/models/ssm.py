@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training scan and O(1)
+recurrent decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024): per head h a scalar
+decay A_h < 0; inputs are projected to z (gate), x (B,S,di), B, C (B,S,N),
+dt (B,S,H); a causal depthwise conv precedes the SSM. The sequence scan is
+chunked (chunk length ``cfg.ssm_chunk``): intra-chunk attention-like
+(L x L lower-triangular decay) matmuls + an inter-chunk state recurrence via
+``lax.scan`` — exactly the transport-like recurrence discipline of the SL
+time loop in the registration core.
+
+Decode keeps {"conv": (B, d_conv, di + 2N), "state": (B, H, P, N)} per layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+#: Sharding hook for the inner projection (B, S, 2di+2n+nh): pins the SSM
+#: block to width/head parallelism over the mesh model axis (the chunked
+#: scan must stay local in sequence — a seq-sharded chunk axis would make
+#: GSPMD gather per scan iteration).
+_INNER_CONSTRAINT = None
+
+
+def set_inner_constraint(fn):
+    global _INNER_CONSTRAINT
+    _INNER_CONSTRAINT = fn
+
+
+def make_ssm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_d_state
+    nh = cfg.ssm_n_heads
+    conv_w = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.make_dense(ks[0], d, 2 * di + 2 * n + nh, dtype),
+        "conv_w": (0.5 * jax.random.normal(ks[1], (cfg.ssm_d_conv, conv_w))).astype(dtype),
+        "conv_b": jnp.zeros((conv_w,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": L.make_norm(di, dtype),
+        "out_proj": L.make_dense(ks[3], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, nh = cfg.ssm_d_inner, cfg.ssm_d_state, cfg.ssm_n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, compute_dtype):
+    """Depthwise causal conv, width K: y_t = sum_k w_k x_{t-K+1+k}."""
+    kk = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kk - 1, 0), (0, 0)))
+    y = sum(pad[:, i: i + xbc.shape[1], :] * w[i][None, None, :]
+            for i in range(kk))
+    return jax.nn.silu(y + b[None, None, :]).astype(compute_dtype)
+
+
+def _segsum(a):
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j<m<=i} a[..., m]."""
+    ll = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((ll, ll), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssm_block(p: Params, cfg, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    """Training/prefill path. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, n, nh, ph = (cfg.ssm_d_inner, cfg.ssm_d_state, cfg.ssm_n_heads,
+                     cfg.ssm_head_dim)
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    zxbcdt = L.dense(p["in_proj"], x, compute_dtype)
+    if _INNER_CONSTRAINT is not None:
+        zxbcdt = _INNER_CONSTRAINT(zxbcdt)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(compute_dtype),
+                       p["conv_b"].astype(compute_dtype), compute_dtype)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(b, s, nh, ph)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (b,s,h)
+    a_eff = -jnp.exp(p["A_log"])[None, None, :] * dt                # (b,s,h) <= 0
+    x_eff = (xs.astype(jnp.float32) * dt[..., None]).astype(compute_dtype)
+
+    # chunked layout
+    xc = x_eff.reshape(b, nc, chunk, nh, ph).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    ac = a_eff.reshape(b, nc, chunk, nh).transpose(1, 0, 3, 2)       # (c,b,h,L)
+
+    # Rematerialized: AD through the chunk scan would otherwise stack the
+    # (b, h, L, L) intra-chunk decay matrices across all chunks as saved
+    # residuals (measured 2.15 GB/layer f32 on jamba train_4k) — recompute
+    # them in the backward pass instead, keeping only the (b,h,p,n) carries.
+    @jax.checkpoint
+    def chunk_step(state, inp):
+        x_k, b_k, c_k, a_k = inp                    # (b,L,h,p) (b,L,n) (b,L,n) (b,h,L)
+        a_cum = jnp.cumsum(a_k, axis=-1)            # (b,h,L)
+        # intra-chunk (diag block)
+        ldec = jnp.exp(_segsum(a_k))                # (b,h,L,L)
+        y_diag = jnp.einsum("bln,bmn,bhlm,bmhp->blhp",
+                            c_k.astype(jnp.float32), b_k.astype(jnp.float32),
+                            ldec, x_k.astype(jnp.float32))
+        # contribution of the incoming state
+        decay_out = jnp.exp(a_cum)                  # (b,h,L)
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp", c_k.astype(jnp.float32),
+                           state, decay_out)
+        # state update
+        decay_in = jnp.exp(a_cum[..., -1:] - a_cum)  # (b,h,L)
+        new_state = state * jnp.exp(a_cum[..., -1])[..., None, None] + jnp.einsum(
+            "bln,bhl,blhp->bhpn", b_k.astype(jnp.float32), decay_in,
+            x_k.astype(jnp.float32))
+        return new_state, (y_diag + y_off).astype(compute_dtype)
+
+    state0 = jnp.zeros((b, nh, ph, n), jnp.float32)
+    _, yc = jax.lax.scan(chunk_step, state0, (xc, bc, cc, ac))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, ph)
+    y = y + p["D"][None, None, :, None].astype(compute_dtype) * xs
+    y = y.reshape(b, s, di)
+    # gated RMSNorm + output projection
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps, compute_dtype)
+    return L.dense(p["out_proj"], y, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def make_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    conv_w = cfg.ssm_d_inner + 2 * cfg.ssm_d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv, conv_w), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                            cfg.ssm_d_state), dtype),
+    }
+
+
+def ssm_cache_abstract(cfg, batch: int, dtype=jnp.float32):
+    conv_w = cfg.ssm_d_inner + 2 * cfg.ssm_d_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_d_conv, conv_w), dtype),
+        "state": jax.ShapeDtypeStruct((batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                                       cfg.ssm_d_state), dtype),
+    }
+
+
+def ssm_decode_step(p: Params, cfg, x: jnp.ndarray, cache, compute_dtype):
+    """x: (B, 1, D) -> (out (B,1,D), new_cache); O(1) in sequence length."""
+    b = x.shape[0]
+    di, n, nh, ph = (cfg.ssm_d_inner, cfg.ssm_d_state, cfg.ssm_n_heads,
+                     cfg.ssm_head_dim)
+    zxbcdt = L.dense(p["in_proj"], x, compute_dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_buf = jnp.concatenate(
+        [cache["conv"][:, 1:, :], xbc.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    y = jnp.sum(conv_buf.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+    xbc_t = jax.nn.silu(y + p["conv_b"].astype(jnp.float32)).astype(compute_dtype)
+
+    xs, b_t, c_t = jnp.split(xbc_t[:, 0], [di, di + n], axis=-1)
+    xs = xs.reshape(b, nh, ph)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # (b,h)
+    da = jnp.exp(-jnp.exp(p["A_log"])[None] * dt)                       # (b,h)
+    x_eff = xs.astype(jnp.float32) * dt[..., None]
+
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", b_t.astype(jnp.float32), x_eff)
+    y = jnp.einsum("bn,bhpn->bhp", c_t.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(compute_dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps, compute_dtype)
+    out = L.dense(p["out_proj"], y, compute_dtype)
+    return out, {"conv": conv_buf, "state": state}

@@ -1,0 +1,2 @@
+from .hlo import collective_bytes  # noqa: F401
+from .analysis import HW, roofline_terms, model_flops  # noqa: F401

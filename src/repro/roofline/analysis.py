@@ -1,0 +1,98 @@
+"""Three-term roofline model for TPU v5e (the target hardware).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(``cost_analysis``/HLO shapes of the SPMD-partitioned module are already
+per-device, so dividing global quantities by chip count is equivalent to the
+assignment's formulas.)
+
+MODEL_FLOPS: 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D for inference
+(N = active params for MoE, D = tokens processed globally). The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) is the "useful fraction" — it exposes
+remat recompute, masked-out attention work, and MoE dispatch overhead.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+#: TPU v5e per-chip constants (assignment-provided).
+HW = dict(
+    peak_flops=197e12,   # bf16 FLOP/s
+    hbm_bw=819e9,        # B/s
+    link_bw=50e9,        # B/s per ICI link
+)
+
+
+@dataclass
+class RooflineResult:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    hlo_flops_device: float
+    hlo_bytes_device: float
+    collective_bytes_device: float
+    model_flops_global: float
+    useful_ratio: float
+    step_s: float                 # max of the three terms (no-overlap bound)
+    roofline_fraction: float      # model-flops-time / step time
+
+
+def model_flops(cfg, shape_cfg, dec_tokens: Optional[int] = None) -> float:
+    """6*N*D (train) or 2*N*D (inference); N = active params.
+
+    Encoder-decoder models split: encoder params see encoder tokens only,
+    decoder (+cross+embedding) params see decoder tokens only.
+    """
+    _, n_active = cfg.param_counts()
+    mult = 6.0 if shape_cfg.kind == "train" else 2.0
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            enc_layer = (cfg._attn_params() + cfg._dense_mlp_params()
+                         + 2 * cfg.d_model)
+            n_enc = cfg.n_enc_layers * enc_layer + cfg.d_model
+            n_dec = n_active - n_enc
+            return mult * (n_enc * b * s + n_dec * b * (s // cfg.dec_ratio))
+        return mult * n_active * b * s
+    # decode: one token per sequence
+    tokens = b * (dec_tokens or 1)
+    return 2.0 * n_active * tokens
+
+
+def roofline_terms(
+    hlo_flops_device: float,
+    hlo_bytes_device: float,
+    collective_bytes_device: float,
+    chips: int,
+    model_flops_global: float = 0.0,
+) -> RooflineResult:
+    t_c = hlo_flops_device / HW["peak_flops"]
+    t_m = hlo_bytes_device / HW["hbm_bw"]
+    t_x = collective_bytes_device / HW["link_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bound = max(terms, key=terms.get)
+    step = max(t_c, t_m, t_x)
+    useful = (model_flops_global / (hlo_flops_device * chips)
+              if hlo_flops_device > 0 else 0.0)
+    # "roofline fraction": the share of the step bound that is irreducible
+    # useful compute — how close the cell is to the compute roofline.
+    t_useful = (model_flops_global / chips) / HW["peak_flops"]
+    frac = t_useful / step if step > 0 else 0.0
+    return RooflineResult(
+        compute_s=t_c,
+        memory_s=t_m,
+        collective_s=t_x,
+        bound=bound,
+        hlo_flops_device=hlo_flops_device,
+        hlo_bytes_device=hlo_bytes_device,
+        collective_bytes_device=collective_bytes_device,
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        step_s=step,
+        roofline_fraction=frac,
+    )

@@ -1,0 +1,90 @@
+"""Top-contributor breakdown of an HLO module (the dry-run 'profiler').
+
+    python -m repro.roofline.debug /path/to/module.hlo [top_n]
+
+Groups trip-weighted FLOPs / memory bytes / collective bytes by the
+``op_name`` metadata (the JAX source operation), which is how §Perf
+hypotheses are localized without real-hardware traces.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from . import hlo as H
+
+_NAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _site(op: H.Op) -> str:
+    m = _NAME_RE.search(op.rest)
+    if not m:
+        return f"<{op.kind}>"
+    name = m.group(1)
+    # strip the jit wrapper prefix, keep the semantic tail
+    name = re.sub(r"^jit\([\w_]+\)/", "", name)
+    return name[-100:]
+
+
+def breakdown(text: str) -> Tuple[Dict[str, float], Dict[str, float],
+                                  Dict[str, float]]:
+    comps, entry = H.parse_module(text)
+    flops_by: Dict[str, float] = defaultdict(float)
+    mem_by: Dict[str, float] = defaultdict(float)
+    coll_by: Dict[str, float] = defaultdict(float)
+
+    def walk(comp: H.Computation, mult: float, fused: bool):
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops_by[_site(op)] += mult * H._dot_flops(op, comp)
+                if not fused:
+                    mem_by[_site(op)] += mult * H._op_mem_bytes(op, comp, comps)
+                continue
+            if op.kind in H._COLLECTIVES:
+                coll_by[_site(op)] += mult * H._collective_moved(op.kind, op)
+                if not fused:
+                    mem_by[_site(op)] += mult * H._op_mem_bytes(op, comp, comps)
+                continue
+            if op.kind == "while":
+                trip = H._trip_count(op, comps)
+                mb = H._BODY_RE.search(op.rest)
+                if mb and mb.group(1) in comps:
+                    walk(comps[mb.group(1)], mult * trip, fused)
+                continue
+            if op.kind in ("fusion", "call"):
+                mc = H._CALLS_RE.search(op.rest)
+                if mc and mc.group(1) in comps:
+                    walk(comps[mc.group(1)], mult, True)
+                if not fused:
+                    mem_by[_site(op)] += mult * H._op_mem_bytes(op, comp, comps)
+                continue
+            if op.kind in H._MEM_EXCLUDE or op.kind == "conditional":
+                continue
+            if not fused:
+                mem_by[_site(op)] += mult * H._op_mem_bytes(op, comp, comps)
+
+    if entry and entry in comps:
+        walk(comps[entry], 1.0, False)
+    return dict(flops_by), dict(mem_by), dict(coll_by)
+
+
+def report(text: str, top_n: int = 15):
+    flops_by, mem_by, coll_by = breakdown(text)
+    for title, d, scale, unit in (
+            ("FLOPs", flops_by, 1e9, "GFLOP"),
+            ("memory bytes", mem_by, 1e9, "GB"),
+            ("collective bytes", coll_by, 1e9, "GB")):
+        print(f"\n== top {title} (per device, trip-weighted) ==")
+        total = sum(d.values())
+        print(f"   total: {total / scale:.2f} {unit}")
+        for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:top_n]:
+            print(f"  {v / scale:10.2f} {unit}  {k}")
+
+
+if __name__ == "__main__":
+    path = sys.argv[1]
+    top = int(sys.argv[2]) if len(sys.argv) > 2 else 15
+    report(open(path).read(), top)

@@ -1,0 +1,311 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each instruction ONCE — a ``lax.scan``
+over 30 layers contributes a single body to the reported FLOPs/bytes (we
+verified this empirically; see EXPERIMENTS.md §Dry-run). Since the whole
+framework leans on scan-over-layers, we walk the HLO module ourselves:
+
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` in
+    scheduled HLO — bodies are weighted by their trip counts (nested loops
+    multiply);
+  * FLOPs: ``dot`` ops contribute 2 * prod(output dims) * prod(contracting
+    dims) (fusion computations are recursed for embedded dots);
+  * memory bytes: per top-level op, operand bytes + output bytes (operands
+    resolved through the computation's symbol table) — fusion internals
+    excluded, matching the HBM-traffic model of cost_analysis;
+  * collective bytes per kind with ring-model multipliers:
+        all-reduce          2 * buffer * (n-1)/n
+        all-gather          buffer * (n-1)/n      (buffer = gathered output)
+        reduce-scatter      buffer * (n-1)        (buffer = scattered shard)
+        all-to-all          buffer * (n-1)/n
+        collective-permute  buffer
+
+All shapes in the per-device SPMD module are per-device shapes, so every
+returned quantity is per device.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "c64": 8, "c128": 16, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_MEM_EXCLUDE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "call", "fusion-marker",
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    rest: str          # operands + attrs (raw tail of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # op name -> out type
+    root_kind: str = ""
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.mem_bytes += mult * other.mem_bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + mult * v
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name: Optional[str] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                current = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        stripped = line.strip()
+        if stripped == "}" or stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, out_type, kind, rest = m.groups()
+            current.ops.append(Op(name, kind, out_type, rest))
+            current.symbols[name] = out_type
+            if stripped.startswith("ROOT"):
+                current.root_kind = kind
+    if current is not None:
+        comps[current.name] = current
+    return comps, entry_name
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 0
+    for _, dims in _shape_dims(op.out_type):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = _LHS_C_RE.search(op.rest)
+    refs = _REF_RE.findall(op.rest)
+    k = 1
+    if m and refs:
+        lhs_type = comp.symbols.get(refs[0], "")
+        shapes = _shape_dims(lhs_type)
+        if shapes:
+            dims = shapes[0][1]
+            for ci in (int(c) for c in m.group(1).split(",") if c):
+                if ci < len(dims):
+                    k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _collective_moved(kind: str, op: Op) -> float:
+    buf = _bytes_of(op.out_type)
+    kind = kind.replace("-start", "")
+    n = _group_size(op.rest)
+    frac = (n - 1) / max(n, 1)
+    if kind == "all-reduce":
+        return 2.0 * buf * frac
+    if kind == "all-gather":
+        return buf * frac
+    if kind == "reduce-scatter":
+        return buf * (n - 1)
+    if kind == "all-to-all":
+        return buf * frac
+    return float(buf)  # collective-permute
+
+
+_SLICE_LIKE = {"slice", "dynamic-slice", "gather"}
+
+
+def _operand_bytes(op: Op, comp: Computation) -> List[int]:
+    out = []
+    for ref in _REF_RE.findall(op.rest.split(", calls=")[0]):
+        t = comp.symbols.get(ref)
+        if t is not None:
+            out.append(_bytes_of(t))
+    return out
+
+
+def _op_mem_bytes(op: Op, comp: Computation,
+                  comps: Optional[Dict[str, Computation]] = None) -> float:
+    """HBM traffic model per top-level op.
+
+    Slices read only what they output; dynamic-update-slice writes only the
+    update region (in-place on TPU under donation/aliasing) — counting their
+    full operand buffers misattributes O(buffer) traffic to O(slice) ops
+    (measured 60x overcount on a scanned decode step). Fusions take the
+    behavior of their root instruction.
+    """
+    out_b = float(_bytes_of(op.out_type))
+    kind = op.kind
+    if kind in ("fusion", "call") and comps is not None:
+        mc = _CALLS_RE.search(op.rest)
+        if mc and mc.group(1) in comps:
+            kind = comps[mc.group(1)].root_kind or kind
+    if kind in _SLICE_LIKE:
+        return 2.0 * out_b
+    if kind == "dynamic-update-slice":
+        ops_b = [b for b in _operand_bytes(op, comp) if b > 256]
+        update = min(ops_b) if ops_b else out_b
+        return 2.0 * float(update)
+    return out_b + float(sum(_operand_bytes(op, comp)))
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    # fallback: largest constant in the condition computation
+    mc = re.search(r"condition=%([\w.\-]+)", op.rest)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for o in comps[mc.group(1)].ops:
+            consts += [int(c) for c in _COND_CONST_RE.findall(o.rest)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation],
+          memo: Dict[Tuple[str, bool], Costs], fused: bool) -> Costs:
+    """Costs of one computation. ``fused=True`` counts only FLOPs/collectives
+    (inside fusions, memory traffic is the callsite's)."""
+    key = (comp.name, fused)
+    if key in memo:
+        return memo[key]
+    memo[key] = Costs()  # break cycles defensively
+    total = Costs()
+    for op in comp.ops:
+        if op.kind == "dot":
+            total.flops += _dot_flops(op, comp)
+            if not fused:
+                total.mem_bytes += _op_mem_bytes(op, comp, comps)
+            continue
+        if op.kind in _COLLECTIVES:
+            moved = _collective_moved(op.kind, op)
+            total.coll_bytes += moved
+            kind = op.kind.replace("-start", "")
+            total.coll_by_kind[kind] = total.coll_by_kind.get(kind, 0.0) + moved
+            if not fused:
+                total.mem_bytes += _op_mem_bytes(op, comp, comps)
+            continue
+        if op.kind == "while":
+            trip = _trip_count(op, comps)
+            mb = _BODY_RE.search(op.rest)
+            if mb and mb.group(1) in comps:
+                total.add(_walk(comps[mb.group(1)], comps, memo, fused), trip)
+            continue
+        if op.kind in ("fusion", "call"):
+            mc = _CALLS_RE.search(op.rest)
+            if mc and mc.group(1) in comps:
+                total.add(_walk(comps[mc.group(1)], comps, memo, True), 1.0)
+            if not fused:
+                total.mem_bytes += _op_mem_bytes(op, comp, comps)
+            continue
+        if op.kind == "conditional":
+            branches = [b for b in _REF_RE.findall(op.rest)
+                        if b in comps and "region" in b]
+            if branches:
+                sub = [_walk(comps[b], comps, memo, fused) for b in branches]
+                biggest = max(sub, key=lambda c: c.flops + c.mem_bytes)
+                total.add(biggest, 1.0)
+            continue
+        if op.kind in _MEM_EXCLUDE:
+            continue
+        if not fused:
+            total.mem_bytes += _op_mem_bytes(op, comp, comps)
+    memo[key] = total
+    return total
+
+
+def analyze_hlo(text: str) -> Costs:
+    """Per-device (flops, memory bytes, collective bytes) with loop weighting."""
+    comps, entry = parse_module(text)
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda k: len(comps[k].ops)) if comps else None
+        if entry is None:
+            return Costs()
+    memo: Dict[Tuple[str, bool], Costs] = {}
+    return _walk(comps[entry], comps, memo, False)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Back-compat wrapper: per-device collective bytes (loop-weighted)."""
+    c = analyze_hlo(hlo_text)
+    return c.coll_bytes, dict(c.coll_by_kind)

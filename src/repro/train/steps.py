@@ -1,0 +1,162 @@
+"""Sharded train / prefill / decode steps.
+
+``make_*_step(model, mesh, ...)`` returns the *unjitted* step function plus
+sharding pytrees, so the same construction serves the real trainer (jit with
+committed arrays), the smoke tests (1-device mesh) and the multi-pod dry-run
+(jit with explicit in/out shardings, lower + compile against
+ShapeDtypeStructs, no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import attention as _attn
+from repro.models import moe as _moe
+from repro.models import ssm as _ssm
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+
+
+def init_train_state(model, rng, opt_cfg: AdamWConfig = AdamWConfig()) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params, adamw.adamw_init(params))
+
+
+def abstract_train_state(model) -> TrainState:
+    aparams = model.abstract_params()
+    return TrainState(aparams, adamw.adamw_init_abstract(aparams))
+
+
+def make_train_step(model, mesh, opt_cfg: AdamWConfig = AdamWConfig()
+                    ) -> Tuple[Callable, TrainState]:
+    """Returns (train_step, state_shardings). Batch shardings via
+    ``batch_shardings(model, mesh, batch_abstract)``."""
+
+    def loss_fn(params, batch):
+        model.constraint = shd.residual_constraint(mesh)
+        _moe.set_expert_constraint(shd.expert_constraint(mesh))
+        _attn.set_qkv_constraint(shd.qkv_constraint(mesh))
+        _ssm.set_inner_constraint(shd.ssm_inner_constraint(mesh))
+        if os.environ.get("REPRO_SCORE_BF16") == "1":
+            _attn.set_block_config(score_dtype=jnp.bfloat16)
+        try:
+            total, metrics = model.loss(params, batch)
+        finally:
+            model.constraint = None
+            _moe.set_expert_constraint(None)
+            _attn.set_qkv_constraint(None)
+            _ssm.set_inner_constraint(None)
+            _attn.reset_block_config()
+        return total, metrics
+
+    aparams = model.abstract_params()
+    p_specs = shd.param_specs(aparams, mesh)
+    o_spec_tree = shd.opt_specs(aparams, mesh)
+
+    microbatches = int(os.environ.get("REPRO_MICROBATCH", "0")) or \
+        getattr(opt_cfg, "microbatches", 1)
+
+    def train_step(state: TrainState, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        else:
+            # Gradient accumulation: activation memory scales with one
+            # microbatch; the fp32 accumulator lives in the ZeRO-1 (data-
+            # sharded) layout so it never replicates the full gradient.
+            k = microbatches
+            micro = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def to_acc_layout(g, spec):
+                return jax.lax.with_sharding_constraint(
+                    g.astype(jnp.float32),
+                    jax.sharding.NamedSharding(mesh, spec))
+
+            def body(carry, mb):
+                acc, loss_acc, aux_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, g, spec: a + to_acc_layout(g, spec),
+                    acc, grads, o_spec_tree)
+                return (acc, loss_acc + loss, aux_acc + metrics["aux"]), None
+
+            acc0 = jax.tree.map(
+                lambda p, spec: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32),
+                    jax.sharding.NamedSharding(mesh, spec)),
+                state.params, o_spec_tree)
+            (acc, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda a: a / k, acc)
+            loss = loss_sum / k
+            metrics = {"aux": aux_sum / k, "xent": loss}
+        new_params, new_opt, opt_metrics = adamw.adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+    state_shardings = TrainState(
+        shd.named(mesh, p_specs),
+        shd.named(mesh, {"m": o_spec_tree, "v": o_spec_tree,
+                         "master": o_spec_tree, "step": P()}),
+    )
+    return train_step, state_shardings
+
+
+def batch_shardings(model, mesh, batch_abstract):
+    return shd.named(mesh, shd.batch_specs(batch_abstract, mesh))
+
+
+def make_prefill_step(model, mesh) -> Tuple[Callable, Any]:
+    def prefill(params, batch):
+        model.constraint = shd.residual_constraint(mesh)
+        _moe.set_expert_constraint(shd.expert_constraint(mesh))
+        _attn.set_qkv_constraint(shd.qkv_constraint(mesh))
+        _ssm.set_inner_constraint(shd.ssm_inner_constraint(mesh))
+        if os.environ.get("REPRO_SCORE_BF16") == "1":
+            _attn.set_block_config(score_dtype=jnp.bfloat16)
+        try:
+            out = model.prefill(params, batch)
+        finally:
+            model.constraint = None
+            _moe.set_expert_constraint(None)
+            _attn.set_qkv_constraint(None)
+            _ssm.set_inner_constraint(None)
+            _attn.reset_block_config()
+        return out
+
+    aparams = model.abstract_params()
+    p_shardings = shd.named(mesh, shd.param_specs(aparams, mesh))
+    return prefill, p_shardings
+
+
+def make_decode_step(model, mesh) -> Tuple[Callable, Any]:
+    def decode(params, cache, tokens, position):
+        _moe.set_expert_constraint(shd.expert_constraint(mesh))
+        try:
+            return model.decode_step(params, cache, tokens, position)
+        finally:
+            _moe.set_expert_constraint(None)
+
+    aparams = model.abstract_params()
+    p_shardings = shd.named(mesh, shd.param_specs(aparams, mesh))
+    return decode, p_shardings
+
+
+def cache_shardings(model, mesh, cache_abstract):
+    return shd.named(mesh, shd.cache_specs(cache_abstract, mesh))

@@ -1,0 +1,16 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single host device. Only launch/dryrun.py forces 512 devices.
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_allclose(a, b, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)

@@ -1,0 +1,188 @@
+"""Unit tests for the attention / MoE / SSM building blocks."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=32, n_heads=4,
+                n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128,
+                compute_dtype="float32", param_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, causal):
+    b, s, n_kv, g, hd = q.shape
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[1]), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,qb,kc", [(32, 8, 8), (64, 16, 16), (16, 16, 16)])
+def test_blockwise_attention_matches_naive(causal, s, qb, kc):
+    key = jax.random.PRNGKey(0)
+    b, n_kv, g, hd = 2, 2, 2, 8
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, n_kv, g, hd))
+    k = jax.random.normal(kk, (b, s, n_kv, hd))
+    v = jax.random.normal(kv_, (b, s, n_kv, hd))
+    got = A.multihead_attention(q, k, v, causal, q_block=qb, kv_chunk=kc)
+    want = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_full():
+    """Decode at position p == full causal attention's row p."""
+    cfg = tiny_cfg()
+    p = A.make_attention(jax.random.PRNGKey(1), cfg, jnp.float32)
+    b, s = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, cfg.d_model))
+    full = A.self_attention(p, cfg, x, jnp.float32, causal=True,
+                            q_block=s, kv_chunk=s)
+    cache = A.make_cache(cfg, b, s, jnp.float32)
+    outs = []
+    for i in range(s):
+        out, cache = A.decode_self_attention(
+            p, cfg, x[:, i: i + 1], cache, jnp.asarray(i, jnp.int32), jnp.float32)
+        outs.append(out)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_head_grouping():
+    """n_heads=4, n_kv=2: heads {0,1} share kv 0; {2,3} share kv 1."""
+    cfg = tiny_cfg()
+    b, s = 1, 8
+    q = jnp.zeros((b, s, 2, 2, 8)).at[..., 0].set(1.0)
+    k = jax.random.normal(jax.random.PRNGKey(3), (b, s, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(4), (b, s, 2, 8))
+    out = A.multihead_attention(q, k, v, causal=False, q_block=s, kv_chunk=s)
+    # both group members of kv-head 0 see identical output
+    np.testing.assert_allclose(out[:, :, 0, 0], out[:, :, 0, 1], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_cfg(**kw):
+    return tiny_cfg(family="moe", n_experts=8, top_k=2, moe_d_ff=32, **kw)
+
+
+def test_moe_router_weights_normalized():
+    cfg = moe_cfg()
+    p = MOE.make_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out, aux = MOE.moe_block(p, cfg, x, jnp.float32)
+    assert out.shape == x.shape
+    assert jnp.isfinite(aux)
+    assert float(aux) > 0.0
+
+
+def test_moe_aux_loss_uniform_router_is_k_over_e():
+    """Uniform router probs: aux = e * sum_e frac_e * (1/e) = k/e exactly
+    (Switch normalization), independent of tie placement."""
+    cfg = moe_cfg()
+    p = MOE.make_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    p = dict(p, router={"w": jnp.zeros_like(p["router"]["w"])})
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    _, aux = MOE.moe_block(p, cfg, x, jnp.float32)
+    assert abs(float(aux) - cfg.top_k / cfg.n_experts) < 1e-5
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.25 and a balanced router, most tokens are kept: the MoE
+    output should differ from zero for the vast majority of tokens."""
+    cfg = moe_cfg()
+    p = MOE.make_moe(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    out, _ = MOE.moe_block(p, cfg, x, jnp.float32)
+    nonzero = float(jnp.mean(jnp.any(jnp.abs(out) > 1e-7, axis=-1)))
+    assert nonzero > 0.6
+
+
+def test_moe_shared_expert_always_active():
+    cfg = moe_cfg(n_shared_experts=1)
+    p = MOE.make_moe(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, cfg.d_model))
+    out, _ = MOE.moe_block(p, cfg, x, jnp.float32)
+    # zero out routed experts: shared path must still contribute
+    p_zero = dict(p, down=jnp.zeros_like(p["down"]))
+    out2, _ = MOE.moe_block(p_zero, cfg, x, jnp.float32)
+    assert float(jnp.max(jnp.abs(out2))) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SSM (Mamba2 / SSD)
+# ---------------------------------------------------------------------------
+
+
+def ssm_cfg(chunk=8):
+    return tiny_cfg(family="ssm", n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0,
+                    ssm_d_state=8, ssm_head_dim=8, ssm_chunk=chunk)
+
+
+def test_ssd_chunked_equals_sequential():
+    """Chunked SSD scan == step-by-step recurrence (the SSD duality)."""
+    cfg = ssm_cfg(chunk=8)
+    p = SSM.make_ssm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 32
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    y_chunked = SSM.ssm_block(p, cfg, x, jnp.float32)
+
+    cache = SSM.make_ssm_cache(cfg, b)
+    ys = []
+    for i in range(s):
+        y, cache = SSM.ssm_decode_step(p, cfg, x[:, i: i + 1], cache, jnp.float32)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_chunked, y_seq, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("c1,c2", [(4, 16), (8, 32)])
+def test_ssd_chunk_size_invariance(c1, c2):
+    b, s = 1, 32
+    cfg1, cfg2 = ssm_cfg(chunk=c1), ssm_cfg(chunk=c2)
+    p = SSM.make_ssm(jax.random.PRNGKey(2), cfg1, jnp.float32)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (b, s, cfg1.d_model))
+    y1 = SSM.ssm_block(p, cfg1, x, jnp.float32)
+    y2 = SSM.ssm_block(p, cfg2, x, jnp.float32)
+    np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_state_decays():
+    """A < 0: with zero input the recurrent state decays monotonically."""
+    cfg = ssm_cfg()
+    p = SSM.make_ssm(jax.random.PRNGKey(4), cfg, jnp.float32)
+    b = 1
+    cache = SSM.make_ssm_cache(cfg, b)
+    cache = {**cache, "state": jnp.ones_like(cache["state"])}
+    x = jnp.zeros((b, 1, cfg.d_model))
+    _, c1 = SSM.ssm_decode_step(p, cfg, x, cache, jnp.float32)
+    _, c2 = SSM.ssm_decode_step(p, cfg, x, c1, jnp.float32)
+    n0 = float(jnp.linalg.norm(cache["state"]))
+    n1 = float(jnp.linalg.norm(c1["state"]))
+    n2 = float(jnp.linalg.norm(c2["state"]))
+    assert n1 < n0 and n2 < n1

@@ -1,0 +1,92 @@
+"""FD8 / spectral first-derivative properties (paper §2.3.2, Fig. 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import derivatives as D
+from repro.core import grid as G
+
+
+def field(shape, freqs=(1, 2, 1), seed=0):
+    x = G.coords(shape)
+    return (jnp.sin(freqs[0] * x[0]) * jnp.cos(freqs[1] * x[1])
+            + jnp.sin(freqs[2] * x[2]))
+
+
+@pytest.mark.parametrize("scheme", ["fd8", "fft"])
+@pytest.mark.parametrize("axis", [0, 1, 2])
+def test_low_freq_derivative_accurate(scheme, axis):
+    """Low-frequency modes: both schemes resolve sin'(x) to high accuracy
+    (the paper's Fig. 2 left side)."""
+    shape = (32, 32, 32)
+    x = G.coords(shape)
+    f = jnp.sin(x[axis])
+    expect = jnp.cos(x[axis])
+    got = D.grad(f, scheme=scheme)[axis]
+    np.testing.assert_allclose(got, expect, atol=5e-5)
+
+
+def test_fd8_error_grows_with_frequency():
+    """FD8 error increases toward Nyquist; FFT stays spectrally exact
+    (the paper's Fig. 2 crossover)."""
+    n = 64
+    shape = (n, n, n)
+    x = G.coords(shape)
+    errs = []
+    for w in (2, 8, 16, 24):
+        f = jnp.sin(w * x[2])
+        d_fd = D.fd8_partial(f, 2)
+        errs.append(float(jnp.max(jnp.abs(d_fd - w * jnp.cos(w * x[2])))) / w)
+    assert errs[0] < errs[-1]
+    assert errs == sorted(errs)
+    # FFT is exact at every resolvable frequency
+    for w in (2, 16, 24):
+        f = jnp.sin(w * x[2])
+        d_sp = D.spectral_partial(f, 2)
+        np.testing.assert_allclose(d_sp, w * jnp.cos(w * x[2]), atol=2e-3 * w)
+
+
+@pytest.mark.parametrize("scheme", ["fd8", "fft"])
+def test_constant_field_zero_gradient(scheme):
+    f = jnp.full((16, 12, 8), 3.25, jnp.float32)
+    g = D.grad(f, scheme=scheme)
+    np.testing.assert_allclose(g, 0.0, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scheme=st.sampled_from(["fd8", "fft"]))
+def test_grad_div_adjointness(seed, scheme):
+    """<grad f, w> = -<f, div w> — exact summation-by-parts for both the
+    antisymmetric FD8 stencil and the spectral operator (periodic)."""
+    shape = (12, 16, 8)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    f = jax.random.normal(k1, shape, jnp.float32)
+    w = jax.random.normal(k2, (3,) + shape, jnp.float32)
+    lhs = G.inner(D.grad(f, scheme=scheme), w)
+    rhs = -G.inner(f, D.div(w, scheme=scheme))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mean_of_derivative_is_zero(seed):
+    """Periodic BC: the mean of any derivative vanishes."""
+    f = jax.random.normal(jax.random.PRNGKey(seed), (8, 12, 16), jnp.float32)
+    for axis in range(3):
+        d = D.fd8_partial(f, axis)
+        assert abs(float(jnp.mean(d))) < 1e-5
+
+
+def test_fd8_polynomial_exactness():
+    """FD8 differentiates trigonometric polynomials up to moderate order
+    essentially exactly (order-8 scheme)."""
+    shape = (48, 8, 8)
+    x = G.coords(shape)
+    f = 0.5 * jnp.sin(2 * x[0]) + 0.25 * jnp.cos(3 * x[0])
+    expect = 1.0 * jnp.cos(2 * x[0]) - 0.75 * jnp.sin(3 * x[0])
+    got = D.fd8_partial(f, 0)
+    np.testing.assert_allclose(got, expect, atol=2e-5)

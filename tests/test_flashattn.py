@@ -1,0 +1,43 @@
+"""Flash-attention Pallas kernel sweeps vs the naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flashattn import ops, ref
+from repro.kernels.flashattn.flashattn import hbm_traffic_model
+
+
+@pytest.mark.parametrize("s,qb,kc", [(64, 32, 32), (128, 32, 16),
+                                     (96, 32, 32), (64, 64, 64)])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_naive(s, qb, kc, causal, dtype):
+    bh, hd = 4, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (bh, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bh, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, s, hd), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, q_block=qb, kv_chunk=kc)
+    want = ref.attention(q, k, v, causal=causal)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_flash_rowwise_softmax_property():
+    """Uniform V: attention output equals V row regardless of scores."""
+    bh, s, hd = 2, 64, 16
+    q = jax.random.normal(jax.random.PRNGKey(3), (bh, s, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (bh, s, hd))
+    v = jnp.broadcast_to(jnp.arange(hd, dtype=jnp.float32), (bh, s, hd))
+    got = ops.flash_attention(q, k, v, q_block=32, kv_chunk=32)
+    np.testing.assert_allclose(got, v, rtol=1e-5, atol=1e-5)
+
+
+def test_traffic_model_favors_flash_at_long_context():
+    m = hbm_traffic_model(32768, 64, 20, 2)
+    assert m["ratio"] > 100
+    m_short = hbm_traffic_model(512, 64, 20, 2)
+    assert m_short["ratio"] < m["ratio"]

@@ -1,0 +1,123 @@
+"""Semi-Lagrangian transport + adjoint/Hessian consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grid as G
+from repro.core import gradient as GR
+from repro.core import hessian as H
+from repro.core import metrics as M
+from repro.core import objective as O
+from repro.core import semilag as SL
+from repro.core import transport as T
+from repro.data import synthetic
+
+CFG = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4)
+SHAPE = (16, 16, 16)
+
+
+def test_transport_constant_is_identity():
+    v = synthetic.random_velocity(jax.random.PRNGKey(0), SHAPE, amplitude=0.5)
+    m0 = jnp.full(SHAPE, 0.75, jnp.float32)
+    traj = T.solve_state(m0, v, CFG)
+    np.testing.assert_allclose(traj[-1], m0, atol=2e-3)
+
+
+def test_zero_velocity_transport_fixed_point():
+    # tolerance floor = the truncated-FIR prefilter error (~5e-4 relative,
+    # the paper's 15-point finite-convolution approximation)
+    m0 = synthetic.brain_phantom(jax.random.PRNGKey(1), SHAPE)
+    v = jnp.zeros((3,) + SHAPE, jnp.float32)
+    traj = T.solve_state(m0, v, CFG)
+    np.testing.assert_allclose(traj[-1], m0, atol=1e-3)
+
+
+def test_translation_velocity_shifts_image():
+    """Constant velocity v: m(x, 1) = m0(x - v). Analytic on a smooth trig
+    field (sharp phantoms accumulate O(h^4) interpolation smoothing per SL
+    step, so the comparison field must be resolved)."""
+    n = 16
+    shape = (n, n, n)
+    x = G.coords(shape)
+    h = G.spacing(shape)[0]
+    m0 = jnp.sin(x[0]) * jnp.cos(x[1]) + 0.5 * jnp.sin(x[2])
+    v = jnp.zeros((3,) + shape, jnp.float32).at[0].set(h)  # one voxel / unit t
+    m1 = T.solve_state(m0, v, CFG)[-1]
+    expect = jnp.sin(x[0] - h) * jnp.cos(x[1]) + 0.5 * jnp.sin(x[2])
+    np.testing.assert_allclose(m1, expect, atol=5e-3)
+
+
+def test_forward_backward_roundtrip():
+    """Advect forward then backward: recover the original (paper Table 3)."""
+    pair = synthetic.make_pair(jax.random.PRNGKey(3), SHAPE, amplitude=0.5)
+    fwd = T.solve_state(pair.m0, pair.v_true, CFG)[-1]
+    back = T.solve_state(fwd, -pair.v_true, CFG)[-1]
+    rel = float(G.norm_l2(back - pair.m0) / G.norm_l2(pair.m0))
+    assert rel < 8e-2  # paper reports 2.5e-2..5.3e-2 at 64^3+
+
+
+def test_adjoint_mass_conservation():
+    """The adjoint PDE is in divergence form: total mass of lambda is
+    conserved along the backward solve."""
+    v = synthetic.random_velocity(jax.random.PRNGKey(4), SHAPE, amplitude=0.4)
+    lam1 = synthetic.brain_phantom(jax.random.PRNGKey(5), SHAPE)
+    traj = T.solve_adjoint(lam1, v, CFG)
+    m_first = float(jnp.sum(traj[0]))
+    m_last = float(jnp.sum(traj[-1]))
+    assert abs(m_first - m_last) / (abs(m_last) + 1e-6) < 5e-2
+
+
+def test_gradient_matches_finite_differences():
+    """Reduced gradient (3) vs directional finite difference of J."""
+    shape = (12, 12, 12)
+    pair = synthetic.make_pair(jax.random.PRNGKey(6), shape, amplitude=0.3)
+    cfg = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4)
+    beta, gamma = 1e-3, 1e-4
+    v = 0.3 * synthetic.random_velocity(jax.random.PRNGKey(7), shape)
+    gs = GR.evaluate(pair.m0, pair.m1, v, beta, gamma, cfg)
+    dv = synthetic.random_velocity(jax.random.PRNGKey(8), shape, amplitude=0.1)
+    eps = 1e-3
+    jp = O.objective(pair.m0, pair.m1, v + eps * dv, beta, gamma, cfg)
+    jm = O.objective(pair.m0, pair.m1, v - eps * dv, beta, gamma, cfg)
+    fd = float((jp - jm) / (2 * eps))
+    an = float(G.inner(gs.g, dv))
+    np.testing.assert_allclose(an, fd, rtol=6e-2, atol=1e-5)
+
+
+def test_hessian_matvec_spd():
+    """Gauss-Newton Hessian is symmetric positive definite (up to
+    discretization error): <H u, u> > 0 and <H u, w> ~ <u, H w>."""
+    shape = (12, 12, 12)
+    pair = synthetic.make_pair(jax.random.PRNGKey(9), shape, amplitude=0.3)
+    cfg = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4)
+    beta, gamma = 1e-3, 1e-4
+    v = jnp.zeros((3,) + shape, jnp.float32)
+    gs = GR.evaluate(pair.m0, pair.m1, v, beta, gamma, cfg)
+    u = synthetic.random_velocity(jax.random.PRNGKey(10), shape, amplitude=0.2)
+    w = synthetic.random_velocity(jax.random.PRNGKey(11), shape, amplitude=0.2)
+    hu = H.matvec(u, gs, v, beta, gamma, cfg)
+    hw = H.matvec(w, gs, v, beta, gamma, cfg)
+    assert float(G.inner(hu, u)) > 0
+    lhs, rhs = float(G.inner(hu, w)), float(G.inner(u, hw))
+    np.testing.assert_allclose(lhs, rhs, rtol=5e-2, atol=1e-7)
+
+
+def test_detF_identity_for_zero_velocity():
+    v = jnp.zeros((3,) + SHAPE, jnp.float32)
+    d = M.det_deformation_gradient(v, CFG)
+    np.testing.assert_allclose(d, 1.0, atol=1e-4)
+
+
+def test_detF_positive_for_moderate_velocity():
+    v = synthetic.random_velocity(jax.random.PRNGKey(12), SHAPE, amplitude=0.5)
+    d = M.det_deformation_gradient(v, CFG)
+    assert float(jnp.min(d)) > 0.0  # diffeomorphic
+
+
+def test_dice_perfect_and_disjoint():
+    a = jnp.zeros(SHAPE).at[2:8].set(1.0)
+    assert float(M.dice(a, a)) == pytest.approx(1.0)
+    b = jnp.zeros(SHAPE).at[10:14].set(1.0)
+    assert float(M.dice(a, b)) == pytest.approx(0.0)

@@ -1,0 +1,73 @@
+"""Spectral operators kept from CLAIRE: A, A^-1, Leray projection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import derivatives as D
+from repro.core import grid as G
+from repro.core import spectral as S
+
+SHAPE = (12, 16, 8)
+
+
+def _zero_mean_vec(seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (3,) + SHAPE, jnp.float32)
+    return v - jnp.mean(v, axis=(1, 2, 3), keepdims=True)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       beta=st.sampled_from([1e-4, 5e-4, 1e-2]),
+       gamma=st.sampled_from([0.0, 1e-4, 1e-1]))
+def test_inv_regop_is_right_inverse(seed, beta, gamma):
+    """A(A^-1 v) = v for zero-mean fields (A is singular on constants)."""
+    v = _zero_mean_vec(seed)
+    w = S.apply_regop(S.apply_inv_regop(v, beta, gamma), beta, gamma)
+    scale = float(jnp.max(jnp.abs(v))) + 1e-6
+    np.testing.assert_allclose(w / scale, v / scale, atol=5e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_leray_idempotent_and_divfree(seed):
+    v = _zero_mean_vec(seed)
+    pv = S.leray_project(v)
+    ppv = S.leray_project(pv)
+    scale = float(jnp.max(jnp.abs(v))) + 1e-6
+    np.testing.assert_allclose(ppv / scale, pv / scale, atol=2e-5)
+    # spectral divergence of the projection vanishes
+    divpv = D.spectral_div(pv)
+    assert float(jnp.max(jnp.abs(divpv))) < 5e-3 * scale
+
+
+def test_regop_spd_energy():
+    """<A v, v> > 0 for non-constant v (Tikhonov energy is positive)."""
+    v = _zero_mean_vec(3)
+    e = G.inner(S.apply_regop(v, 5e-4, 1e-4), v)
+    assert float(e) > 0.0
+
+
+def test_reg_energy_matches_operator():
+    v = _zero_mean_vec(7)
+    e1 = S.reg_energy(v, 2e-3, 1e-4)
+    e2 = 0.5 * G.inner(S.apply_regop(v, 2e-3, 1e-4), v)
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-5)
+
+
+def test_gauss_smooth_reduces_high_freq():
+    x = G.coords(SHAPE)
+    f = jnp.sin(5 * x[0])
+    g = S.gauss_smooth(f, sigma_vox=2.0)
+    assert float(jnp.max(jnp.abs(g))) < 0.7 * float(jnp.max(jnp.abs(f)))
+
+
+def test_regop_symmetric():
+    """A is self-adjoint: <A u, v> == <u, A v>."""
+    u = _zero_mean_vec(11)
+    v = _zero_mean_vec(13)
+    lhs = G.inner(S.apply_regop(u, 5e-4, 1e-4), v)
+    rhs = G.inner(u, S.apply_regop(v, 5e-4, 1e-4))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-4, atol=1e-6)
