@@ -10,15 +10,28 @@ healthy band, (iv) Dice improves substantially.
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/registration_bench.py`
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    sys.path.insert(0, str(_root / "src"))
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import metrics as M
-from repro.core.registration import register
+from repro.core.registration import register, register_batch, register_multires
 from repro.data import synthetic
 from benchmarks.common import fmt, print_table
 
 VARIANTS = ["fft-cubic", "fd8-cubic", "fd8-linear"]
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results"
 
 
 def run(n: int = 32, max_newton: int = 10, seeds=(0,)):
@@ -57,5 +70,147 @@ def run(n: int = 32, max_newton: int = 10, seeds=(0,)):
     return rows
 
 
+
+# ---------------------------------------------------------------------------
+# Solve-strategy comparison: single-level vs multi-resolution vs batched.
+# Records the acceptance numbers for the multires/batch pipeline into
+# results/BENCH_api_smoke.json (appending entries of the same schema).
+# ---------------------------------------------------------------------------
+
+
+def _append_json(path: pathlib.Path, entry: dict):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    entries = []
+    if path.exists():
+        try:
+            entries = json.loads(path.read_text())
+        except (ValueError, OSError):
+            entries = None
+        if not isinstance(entries, list):
+            # keep the unusable history aside instead of overwriting it
+            backup = path.with_suffix(path.suffix + ".corrupt")
+            path.replace(backup)
+            print(f"[bench] WARNING: {path} was unusable; moved to {backup}")
+            entries = []
+    entries.append(entry)
+    path.write_text(json.dumps(entries, indent=2))
+
+
+def run_modes(
+    n: int = 16,
+    max_newton: int = 20,
+    variant: str = "fd8-cubic",
+    seed: int = 7,
+    out: str = "BENCH_api_smoke.json",
+):
+    """Single vs multires vs batch on one synthetic problem.
+
+    Claims checked (the multires/batch pipeline acceptance):
+      * multires reaches the single-level mismatch (+-5%) with strictly
+        fewer fine-grid Newton iterations;
+      * batched registration matches the per-pair single results to 1e-5.
+    """
+    grid = (n, n, n)
+    key = jax.random.PRNGKey(seed)
+    pair = synthetic.make_pair(key, grid, amplitude=0.5)
+
+    single = register(pair.m0, pair.m1, variant=variant, max_newton=max_newton)
+    multires = register_multires(pair.m0, pair.m1, variant=variant,
+                                 max_newton=max_newton)
+
+    # batch: pair 0 = the same problem, pair 1 = the reverse registration.
+    m0b = jnp.stack([pair.m0, pair.m1])
+    m1b = jnp.stack([pair.m1, pair.m0])
+    batched = register_batch(m0b, m1b, variant=variant, max_newton=max_newton)
+    single_rev = register(pair.m1, pair.m0, variant=variant,
+                          max_newton=max_newton)
+
+    rows = [
+        ["single", f"{n}^3", single.iters, single.iters, single.matvecs,
+         fmt(single.mismatch_rel), fmt(single.rel_grad),
+         fmt(single.wall_time_s, 1)],
+        ["multires", "->".join(str(s[0]) for s in multires.levels),
+         multires.iters, multires.fine_iters, multires.matvecs,
+         fmt(multires.mismatch_rel), fmt(multires.rel_grad),
+         fmt(multires.wall_time_s, 1)],
+        ["batch[0]", f"{n}^3", batched.iters[0], batched.iters[0],
+         batched.matvecs[0], fmt(batched.mismatch_rel[0]),
+         fmt(batched.rel_grad[0]), fmt(batched.wall_time_s, 1)],
+        ["batch[1]", f"{n}^3", batched.iters[1], batched.iters[1],
+         batched.matvecs[1], fmt(batched.mismatch_rel[1]),
+         fmt(batched.rel_grad[1]), fmt(batched.wall_time_s, 1)],
+    ]
+    print_table(
+        f"Solve strategies at {n}^3 (variant {variant}): grid continuation "
+        "cuts fine-grid Newton iterations; batching matches per-pair results",
+        ["mode", "grid(s)", "iters", "fine iters", "matvecs", "mismatch",
+         "|g|rel", "time s"],
+        rows)
+
+    entry = dict(
+        ts=time.time(),
+        host_devices=jax.device_count(),
+        single=dict(
+            grid=list(grid),
+            iters=single.iters,
+            matvecs=single.matvecs,
+            mismatch_rel=single.mismatch_rel,
+            rel_grad=single.rel_grad,
+            wall_time_s=single.wall_time_s,
+        ),
+        multires=dict(
+            grid=list(grid),
+            levels=[list(s) for s in multires.levels],
+            iters=multires.iters,
+            fine_iters=multires.fine_iters,
+            matvecs=multires.matvecs,
+            mismatch_rel=multires.mismatch_rel,
+            rel_grad=multires.rel_grad,
+            wall_time_s=multires.wall_time_s,
+        ),
+        batch=dict(
+            grid=list(grid),
+            batch=int(m0b.shape[0]),
+            iters=batched.iters,
+            matvecs=batched.matvecs,
+            mismatch_rel=batched.mismatch_rel,
+            single_mismatch_rel=[single.mismatch_rel, single_rev.mismatch_rel],
+            max_abs_delta=max(
+                abs(batched.mismatch_rel[0] - single.mismatch_rel),
+                abs(batched.mismatch_rel[1] - single_rev.mismatch_rel),
+            ),
+            wall_time_s=batched.wall_time_s,
+        ),
+    )
+    _append_json(RESULTS_DIR / out, entry)
+    print(f"[bench] appended entry to {RESULTS_DIR / out}")
+
+    # acceptance claims
+    assert multires.fine_iters < single.iters, (
+        f"multires fine iters {multires.fine_iters} !< single {single.iters}")
+    assert multires.mismatch_rel <= single.mismatch_rel * 1.05, (
+        f"multires mismatch {multires.mismatch_rel} worse than "
+        f"single {single.mismatch_rel} (+5%)")
+    assert entry["batch"]["max_abs_delta"] < 1e-5, (
+        f"batch/single mismatch delta {entry['batch']['max_abs_delta']}")
+    return entry
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=["variants", "api-smoke"],
+                    default="variants")
+    ap.add_argument("--grid", type=int, default=None)
+    ap.add_argument("--max-newton", type=int, default=None)
+    ap.add_argument("--variant", default="fd8-cubic")
+    args = ap.parse_args(argv)
+    if args.mode == "variants":
+        run(args.grid or 32,
+            **({"max_newton": args.max_newton} if args.max_newton else {}))
+    else:
+        run_modes(n=args.grid or 16, max_newton=args.max_newton or 20,
+                  variant=args.variant)
+
+
 if __name__ == "__main__":
-    run()
+    main()

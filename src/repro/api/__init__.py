@@ -1,0 +1,30 @@
+"""Public facade of the registration system.
+
+    from repro import api
+
+    problem = api.RegistrationProblem.synthetic(seed=0, grid=(64, 64, 64))
+    result = api.solve(problem, api.SolverOptions(mode="multires"))
+    print(result.summary())
+
+Three solve strategies (``SolverOptions.mode``):
+  single   — Gauss-Newton-Krylov on the full grid (the paper's solver);
+  multires — CLAIRE-style grid continuation: coarse-to-fine pyramid with
+             spectral prolongation warm starts (fewer fine-grid iterations);
+  batch    — many pairs at once through one vmapped Newton step
+             (population-study throughput);
+  auto     — batch for batched problems, multires when the grid can coarsen.
+"""
+
+from .options import MODES, SolverOptions
+from .problem import RegistrationProblem
+from .result import Result
+from .solver import Solver, solve
+
+__all__ = [
+    "MODES",
+    "RegistrationProblem",
+    "Result",
+    "Solver",
+    "SolverOptions",
+    "solve",
+]

@@ -1,0 +1,76 @@
+"""Solver options for the registration facade.
+
+One flat, JSON-serializable record of every knob the facade exposes: the
+paper's Table 6 kernel variant, the Gauss-Newton/regularization parameters,
+and the multi-resolution schedule. ``mode="auto"`` picks batched solving for
+batched problems and multi-resolution for grids large enough to coarsen.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core import registration as _reg
+
+MODES = ("auto", "single", "multires", "batch")
+
+
+@dataclass(frozen=True)
+class SolverOptions:
+    # kernel variant (Table 6) and transport discretization
+    variant: str = "fd8-cubic"
+    nt: int = 4
+    backend: str = "jnp"
+    mixed_precision: bool = False
+    # objective / Gauss-Newton
+    beta: float = 5e-4
+    gamma: float = 1e-4
+    tol_rel_grad: float = 5e-2
+    max_newton: int = 50
+    continuation: bool = False
+    # solve strategy
+    mode: str = "auto"
+    # multi-resolution schedule (mode "multires" or "auto")
+    levels: Optional[Sequence[Tuple[int, int, int]]] = None
+    n_levels: Optional[int] = None
+    min_size: int = 8
+    coarse_tol: Optional[float] = None
+    level_newton: Optional[Sequence[int]] = None
+    coarse_variant: Optional[str] = None
+    presmooth_sigma: float = 0.0
+    verbose: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.variant not in _reg.VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; choose from {sorted(_reg.VARIANTS)}"
+            )
+        if self.coarse_variant is not None and self.coarse_variant not in _reg.VARIANTS:
+            raise ValueError(f"unknown coarse_variant {self.coarse_variant!r}")
+
+    def resolve_mode(self, is_batched: bool, grid: Tuple[int, int, int]) -> str:
+        """Concrete solve strategy for a problem of the given shape."""
+        if self.mode != "auto":
+            if self.mode == "batch" and not is_batched:
+                raise ValueError("mode='batch' requires a batched problem")
+            if is_batched and self.mode != "batch":
+                raise ValueError(
+                    f"batched problem requires mode 'batch' or 'auto', got {self.mode!r}"
+                )
+            return self.mode
+        if is_batched:
+            return "batch"
+        if min(grid) >= 2 * self.min_size:
+            return "multires"
+        return "single"
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        if d["levels"] is not None:
+            d["levels"] = [list(s) for s in d["levels"]]
+        if d["level_newton"] is not None:
+            d["level_newton"] = list(d["level_newton"])
+        return d

@@ -1,0 +1,100 @@
+"""The facade solver: dispatches a problem to the right core driver.
+
+    from repro import api
+    problem = api.RegistrationProblem.synthetic(seed=0, grid=(64, 64, 64))
+    result = api.Solver(api.SolverOptions(variant="fd8-cubic")).solve(problem)
+    print(result.summary())
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.core import metrics as _metrics
+from repro.core import registration as _reg
+
+from .options import SolverOptions
+from .problem import RegistrationProblem
+from .result import Result
+
+
+@dataclass(frozen=True)
+class Solver:
+    options: SolverOptions = field(default_factory=SolverOptions)
+
+    def solve(self, problem: RegistrationProblem) -> Result:
+        o = self.options
+        mode = o.resolve_mode(problem.is_batched, problem.grid)
+        common = dict(
+            variant=o.variant, beta=o.beta, gamma=o.gamma, nt=o.nt,
+            tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
+            backend=o.backend, mixed_precision=o.mixed_precision,
+            verbose=o.verbose,
+        )
+        if mode == "batch":
+            if o.continuation:
+                raise ValueError(
+                    "continuation is not supported with batched solving"
+                )
+            res = _reg.register_batch(problem.m0, problem.m1, **common)
+            result = Result(
+                mode=mode, grid=problem.grid, batch=problem.batch_size,
+                v=res.v, m_warped=res.m_warped,
+                mismatch_rel=res.mismatch_rel, detF=res.detF,
+                iters=res.iters, matvecs=res.matvecs, rel_grad=res.rel_grad,
+                converged=res.converged, wall_time_s=res.wall_time_s,
+            )
+        elif mode == "multires":
+            res = _reg.register_multires(
+                problem.m0, problem.m1, continuation=o.continuation,
+                levels=o.levels, n_levels=o.n_levels, min_size=o.min_size,
+                coarse_tol=o.coarse_tol, level_newton=o.level_newton,
+                coarse_variant=o.coarse_variant,
+                presmooth_sigma=o.presmooth_sigma, **common,
+            )
+            result = Result(
+                mode=mode, grid=problem.grid, v=res.v, m_warped=res.m_warped,
+                mismatch_rel=res.mismatch_rel, detF=res.detF,
+                iters=res.iters, matvecs=res.matvecs, rel_grad=res.rel_grad,
+                converged=res.converged, wall_time_s=res.wall_time_s,
+                levels=res.levels, fine_iters=res.fine_iters,
+                level_results=res.level_results,
+            )
+        else:
+            res = _reg.register(problem.m0, problem.m1,
+                                continuation=o.continuation, **common)
+            result = Result(
+                mode=mode, grid=problem.grid, v=res.v, m_warped=res.m_warped,
+                mismatch_rel=res.mismatch_rel, detF=res.detF,
+                iters=res.iters, matvecs=res.matvecs, rel_grad=res.rel_grad,
+                converged=res.converged, wall_time_s=res.wall_time_s,
+            )
+        return self._with_dice(problem, result)
+
+    def _with_dice(self, problem: RegistrationProblem, result: Result) -> Result:
+        if problem.labels0 is None or problem.labels1 is None:
+            return result
+        cfg = _reg.make_transport_config(
+            self.options.variant, nt=self.options.nt,
+            backend=self.options.backend,
+            mixed_precision=self.options.mixed_precision,
+        )
+        if problem.is_batched:
+            before, after = [], []
+            for b in range(problem.batch_size):
+                before.append(float(_metrics.dice(problem.labels0[b],
+                                                  problem.labels1[b])))
+                warped = _metrics.warp_labels(problem.labels0[b], result.v[b], cfg)
+                after.append(float(_metrics.dice(warped, problem.labels1[b])))
+        else:
+            before = float(_metrics.dice(problem.labels0, problem.labels1))
+            warped = _metrics.warp_labels(problem.labels0, result.v, cfg)
+            after = float(_metrics.dice(warped, problem.labels1))
+        return replace(result, dice_before=before, dice_after=after)
+
+
+def solve(problem: RegistrationProblem,
+          options: Optional[SolverOptions] = None) -> Result:
+    """One-call convenience: ``api.solve(problem, options)``."""
+    return Solver(options or SolverOptions()).solve(problem)

@@ -19,6 +19,7 @@ from typing import Any, Callable, Dict, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import gradient as _grad
 from . import grid as _grid
@@ -55,8 +56,8 @@ class GNConfig(NamedTuple):
     cont_tol: float = 2.5e-1    # per-level relative-gradient tolerance
 
 
-def _make_step(cfg: _tr.TransportConfig, gn: GNConfig):
-    """Build the jitted Newton step for a fixed numeric configuration."""
+def _build_step(cfg: _tr.TransportConfig, gn: GNConfig):
+    """Build the (untransformed) Newton step for a fixed numeric config."""
 
     def step(m0, m1, v, beta, gamma, eta):
         gs = _grad.evaluate(m0, m1, v, beta, gamma, cfg)
@@ -104,7 +105,25 @@ def _make_step(cfg: _tr.TransportConfig, gn: GNConfig):
             ls_evals=ls_evals + 1,
         )
 
-    return jax.jit(step)
+    return step
+
+
+def _make_step(cfg: _tr.TransportConfig, gn: GNConfig):
+    """Jitted Newton step for one image pair."""
+    return jax.jit(_build_step(cfg, gn))
+
+
+def _make_batch_step(cfg: _tr.TransportConfig, gn: GNConfig):
+    """Jitted Newton step vmapped over a leading batch axis.
+
+    ``m0, m1, v, eta`` carry a batch axis; ``beta, gamma`` are shared. The
+    inner ``while_loop``s (PCG, line search) are batched by JAX with masked
+    carries, so each pair runs exactly its own iteration counts and the
+    per-pair stats match the unbatched step.
+    """
+    return jax.jit(
+        jax.vmap(_build_step(cfg, gn), in_axes=(0, 0, 0, None, None, 0))
+    )
 
 
 class GNResult(NamedTuple):
@@ -125,9 +144,24 @@ def solve(
     cfg: _tr.TransportConfig,
     gn: GNConfig = GNConfig(),
     v0: jnp.ndarray | None = None,
+    gnorm_ref: float | None = None,
+    eta0: float | None = None,
     verbose: bool = False,
 ) -> GNResult:
-    """Run the Gauss-Newton-Krylov solver  g(v) = 0  for v."""
+    """Run the Gauss-Newton-Krylov solver  g(v) = 0  for v.
+
+    ``gnorm_ref`` fixes the reference for the relative-gradient stopping test
+    instead of the gradient norm at the incoming iterate. Warm-started solves
+    (grid continuation) need this: the prolonged coarse solution already has a
+    small gradient, and measuring convergence relative to *it* would demand
+    far more accuracy than the cold-started solve delivers.
+
+    ``eta0`` overrides the PCG forcing term of the *first* Newton step (the
+    Eisenstat-Walker sequence needs one observed gradient before it can
+    adapt). Grid continuation passes the coarse level's final relative
+    gradient here so the first warm-started step is solved tightly instead
+    of at the loose cold-start cap.
+    """
     shape = m0.shape
     v = v0 if v0 is not None else jnp.zeros((3,) + shape, dtype=m0.dtype)
     step_fn = _make_step(cfg, gn)
@@ -146,7 +180,7 @@ def solve(
     history: List[Dict[str, float]] = []
     total_matvecs = 0
     total_iters = 0
-    gnorm0_global = None
+    gnorm0_global = gnorm_ref
     gnorm_last = None
     t0 = time.perf_counter()
 
@@ -156,12 +190,12 @@ def solve(
         budget = gn.max_newton - total_iters if is_target else max(
             2, (gn.max_newton - total_iters) // 4
         )
-        gnorm0_level = None
+        gnorm0_level = gnorm_ref
         prev_gnorm = None
         for _ in range(max(budget, 1)):
             # Eisenstat-Walker superlinear forcing: eta = min(cap, sqrt(g/g0)).
             if gnorm0_level is None or prev_gnorm is None:
-                eta = gn.forcing_max
+                eta = min(gn.forcing_max, eta0) if eta0 is not None else gn.forcing_max
             else:
                 eta = float(
                     min(gn.forcing_max, (prev_gnorm / gnorm0_level) ** 0.5)
@@ -195,13 +229,16 @@ def solve(
                     f"pcg={h['pcg_iters']} a={h['alpha']:.3f}"
                 )
             gnorm_last = gnorm
+            # The step's PCG solve ran whether or not we accept the update,
+            # so its matvecs count toward the Table-1 work accounting even on
+            # the final (converged) step.
+            total_matvecs += int(stats.pcg_iters)
             if rel <= tol:
                 # converged at this level -- do not apply the (already
                 # computed) step past the tolerance; keep v as-is.
                 break
             v = stats.v_new
             prev_gnorm = gnorm
-            total_matvecs += int(stats.pcg_iters)
             total_iters += 1
             if total_iters >= gn.max_newton:
                 break
@@ -219,6 +256,120 @@ def solve(
         gnorm=gnorm_last or 0.0,
         rel_grad=rel_final,
         converged=rel_final <= gn.tol_rel_grad,
+        history=history,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched driver: many image pairs, one vmapped Newton step (the multi-GPU
+# follow-up's "many registrations concurrently" workload, on one device).
+# ---------------------------------------------------------------------------
+
+
+class BatchGNResult(NamedTuple):
+    v: jnp.ndarray            # (B, 3, N1, N2, N3)
+    iters: np.ndarray         # (B,) accepted Newton steps per pair
+    matvecs: np.ndarray       # (B,) Hessian matvecs per pair
+    gnorm0: np.ndarray        # (B,)
+    gnorm: np.ndarray         # (B,) at the last evaluated iterate
+    rel_grad: np.ndarray      # (B,)
+    converged: np.ndarray     # (B,) bool
+    history: List[Dict[str, np.ndarray]]   # per evaluation, per-pair arrays
+    wall_time_s: float
+
+
+def solve_batch(
+    m0: jnp.ndarray,
+    m1: jnp.ndarray,
+    cfg: _tr.TransportConfig,
+    gn: GNConfig = GNConfig(),
+    v0: jnp.ndarray | None = None,
+    verbose: bool = False,
+) -> BatchGNResult:
+    """Solve ``B`` independent registrations with one vmapped Newton step.
+
+    ``m0, m1`` carry a leading batch axis ``(B, N1, N2, N3)``. The outer loop
+    mirrors :func:`solve` (Eisenstat-Walker forcing, relative-gradient stop)
+    with *per-pair* state; converged pairs are frozen with masked updates
+    while the rest keep iterating, so the returned per-pair results match the
+    unbatched solver.
+    """
+    if gn.continuation:
+        raise ValueError("solve_batch does not support beta-continuation")
+    if m0.ndim != 4:
+        raise ValueError(f"expected batched images (B, N1, N2, N3), got {m0.shape}")
+    bsz = m0.shape[0]
+    shape = m0.shape[1:]
+    v = v0 if v0 is not None else jnp.zeros((bsz, 3) + shape, dtype=m0.dtype)
+    bstep = _make_batch_step(cfg, gn)
+
+    active = np.ones(bsz, dtype=bool)
+    ever_converged = np.zeros(bsz, dtype=bool)
+    iters = np.zeros(bsz, dtype=np.int64)
+    matvecs = np.zeros(bsz, dtype=np.int64)
+    gnorm0 = None
+    gnorm_last = np.zeros(bsz, dtype=np.float64)
+    eta = np.full(bsz, gn.forcing_max, dtype=np.float64)
+    history: List[Dict[str, np.ndarray]] = []
+    t0 = time.perf_counter()
+
+    for _ in range(gn.max_newton):
+        stats = bstep(
+            m0, m1, v,
+            jnp.float32(gn.beta), jnp.float32(gn.gamma),
+            jnp.asarray(eta, dtype=jnp.float32),
+        )
+        gnorm = np.asarray(stats.gnorm, dtype=np.float64)
+        if gnorm0 is None:
+            gnorm0 = gnorm.copy()
+        rel = np.where(gnorm0 > 0, gnorm / gnorm0, 0.0)
+        gnorm_last = np.where(active, gnorm, gnorm_last)
+        pcg = np.asarray(stats.pcg_iters, dtype=np.int64)
+        # Final-step PCG work counts, matching the unbatched accounting.
+        matvecs += np.where(active, pcg, 0)
+        just_conv = active & (rel <= gn.tol_rel_grad)
+        ever_converged |= just_conv
+        advance = active & ~just_conv
+        mask = jnp.asarray(advance).reshape((bsz,) + (1,) * (v.ndim - 1))
+        v = jnp.where(mask, stats.v_new, v)
+        iters += advance
+        eta = np.where(
+            advance,
+            np.minimum(gn.forcing_max,
+                       np.sqrt(np.maximum(gnorm, 0.0) / np.maximum(gnorm0, 1e-30))),
+            eta,
+        )
+        history.append(
+            dict(
+                gnorm=gnorm,
+                rel_grad=rel,
+                active=active.copy(),
+                j=np.asarray(stats.j_total, dtype=np.float64),
+                j_mismatch=np.asarray(stats.j_mismatch, dtype=np.float64),
+                pcg_iters=pcg,
+                alpha=np.asarray(stats.alpha, dtype=np.float64),
+            )
+        )
+        if verbose:
+            print(
+                f"[GN-batch] it={len(history) - 1:3d} active={int(active.sum())} "
+                f"|g|rel={np.array2string(rel, precision=3)} pcg={pcg}"
+            )
+        active = advance
+        if not active.any():
+            break
+
+    rel_final = np.where(gnorm0 > 0, gnorm_last / gnorm0, 0.0) if gnorm0 is not None \
+        else np.zeros(bsz)
+    return BatchGNResult(
+        v=v,
+        iters=iters,
+        matvecs=matvecs,
+        gnorm0=gnorm0 if gnorm0 is not None else np.zeros(bsz),
+        gnorm=gnorm_last,
+        rel_grad=rel_final,
+        converged=ever_converged | (rel_final <= gn.tol_rel_grad),
         history=history,
         wall_time_s=time.perf_counter() - t0,
     )

@@ -115,12 +115,19 @@ def reg_energy(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
 
 def gauss_smooth(f: jnp.ndarray, sigma_vox: float) -> jnp.ndarray:
     """Spectral Gaussian smoothing (used for synthetic data generation and
-    multi-scale/continuation schemes). sigma is in voxel units of axis 0."""
+    multi-scale/continuation schemes). sigma is in voxel units of axis 0.
+
+    Uses *unmasked* wavenumbers: the Gaussian filter is even in k, so the
+    Nyquist sign ambiguity that forces masking in the odd-order derivative
+    operators does not arise — and masking here would leave the filter at
+    exp(0) = 1 on the Nyquist planes, passing high-frequency noise through
+    unattenuated instead of suppressing it.
+    """
     shape = f.shape[-3:]
-    ks, _, _ = _khat(shape)
+    k1, k2, k3 = _grid.wavenumbers(shape, rfft=True)
     h = _grid.spacing(shape)
     sig = sigma_vox * h[0]
-    filt = jnp.exp(-0.5 * (sig ** 2) * (ks[0] ** 2 + ks[1] ** 2 + ks[2] ** 2))
+    filt = jnp.exp(-0.5 * (sig ** 2) * (k1 * k1 + k2 * k2 + k3 * k3))
     if f.ndim == 3:
         return jnp.fft.irfftn(filt * jnp.fft.rfftn(f), s=shape).astype(f.dtype)
     return jnp.stack(

@@ -40,7 +40,9 @@ def compressed_psum_pod(grads: Any, axis: str = "pod") -> Any:
 
     Must run inside a shard_map manual over ``axis``.
     """
-    n = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is not in JAX 0.4.x; psum of a literal 1 is folded to
+    # the axis size at trace time (no collective is emitted).
+    n = jax.lax.psum(1, axis)
 
     def one(g):
         q, scale = quantize_int8(g)

@@ -81,26 +81,33 @@ _BASES = {
 
 
 def _interp_body(q1_ref, q2_ref, q3_ref, fpad_ref, o_ref, *,
-                 basis, halo, block, weight_dtype):
+                 basis, halo, block, weight_dtype, full_field=False):
     """One output tile: gather + tensor-product basis evaluation."""
     weight_fn, support, base_off = _BASES[basis]
     b1, b2, b3 = block
     h = halo
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    k = pl.program_id(2)
 
-    tile = fpad_ref[...]  # (b1+2h, b2+2h, b3+2h) in VMEM
+    tile = fpad_ref[...]  # (b1+2h, b2+2h, b3+2h) in VMEM (or full field)
     t1, t2, t3 = tile.shape
     tile_flat = tile.reshape(-1)
     if weight_dtype is not None:
         tile_flat = tile_flat.astype(weight_dtype)
 
-    # Local (tile-frame) query coordinates. Global padded coordinate of a
-    # query q is q + h; this tile starts at element offset (i*b1, j*b2, k*b3).
-    l1 = q1_ref[...] + (h - i * b1)
-    l2 = q2_ref[...] + (h - j * b2)
-    l3 = q3_ref[...] + (h - k * b3)
+    if full_field:
+        # Compat path (no pl.Element): the ref holds the whole padded field,
+        # so queries address it directly in the global padded frame.
+        l1 = q1_ref[...] + h
+        l2 = q2_ref[...] + h
+        l3 = q3_ref[...] + h
+    else:
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        k = pl.program_id(2)
+        # Local (tile-frame) query coordinates. Global padded coordinate of a
+        # query q is q + h; this tile starts at element offset (i*b1, j*b2, k*b3).
+        l1 = q1_ref[...] + (h - i * b1)
+        l2 = q2_ref[...] + (h - j * b2)
+        l3 = q3_ref[...] + (h - k * b3)
 
     f1 = jnp.floor(l1)
     f2 = jnp.floor(l2)
@@ -171,13 +178,22 @@ def interp3d_pallas(
     fpad = jnp.pad(f, halo, mode="wrap")
 
     q_spec = pl.BlockSpec((b1, b2, b3), lambda i, j, k: (i, j, k))
-    # Overlapping halo tiles: element-indexed BlockSpec with stride = block.
-    f_spec = pl.BlockSpec(
-        (pl.Element(b1 + 2 * halo), pl.Element(b2 + 2 * halo), pl.Element(b3 + 2 * halo)),
-        lambda i, j, k: (i * b1, j * b2, k * b3),
-    )
+    full_field = not hasattr(pl, "Element")
+    if full_field:
+        # Pallas in JAX 0.4.x has no element-indexed BlockSpec, so overlapping
+        # halo tiles cannot be expressed: hand every program the whole padded
+        # field as block 0 and let the body index it globally. Correctness is
+        # identical; on real hardware the Element path is the fast one.
+        f_spec = pl.BlockSpec(fpad.shape, lambda i, j, k: (0, 0, 0))
+    else:
+        # Overlapping halo tiles: element-indexed BlockSpec with stride = block.
+        f_spec = pl.BlockSpec(
+            (pl.Element(b1 + 2 * halo), pl.Element(b2 + 2 * halo), pl.Element(b3 + 2 * halo)),
+            lambda i, j, k: (i * b1, j * b2, k * b3),
+        )
     body = functools.partial(
-        _interp_body, basis=basis, halo=halo, block=block, weight_dtype=weight_dtype
+        _interp_body, basis=basis, halo=halo, block=block,
+        weight_dtype=weight_dtype, full_field=full_field,
     )
     return pl.pallas_call(
         body,

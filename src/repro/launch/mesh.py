@@ -20,19 +20,19 @@ from typing import Optional, Sequence, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+# JAX 0.4.x: jax.make_mesh has no axis_types parameter (all axes behave as
+# the later AxisType.Auto); it arrived with jax.sharding.AxisType in 0.5+.
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh (smoke tests use (1, 1) or (2, 2) host meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def dp_axis_names(mesh) -> Tuple[str, ...]:

@@ -1,0 +1,111 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+The tier-1 container does not ship `hypothesis` (see requirements-dev.txt for
+the real dev environment). Rather than letting four test modules crash at
+collection time, ``install()`` registers a minimal, deterministic emulation of
+the small API surface the tests use:
+
+    from hypothesis import given, settings, strategies as st
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), beta=st.sampled_from([...]))
+
+``given`` runs the test body for ``max_examples`` samples drawn from a
+fixed-seed PRNG, so the property tests still execute (reproducibly) instead
+of being skipped. When the real hypothesis is importable, this module is
+never installed and behaviour is unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_SHIM_SEED = 0x5EED5EED
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    """A sampling rule: draw one value from a seeded ``random.Random``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda rng: rng.randint(int(min_value), int(max_value)))
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda rng: rng.choice(elems))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(float(min_value), float(max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording ``max_examples``; other knobs are ignored."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("hypothesis shim supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", None) or getattr(
+                fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(_SHIM_SEED)
+            for _ in range(int(n)):
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (the real hypothesis does the same).
+        sig = inspect.signature(fn)
+        kept = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register shim modules as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:  # real package (or shim) already present
+        return
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "floats", "booleans", "just"):
+        setattr(st_mod, name, globals()[name])
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_shim__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,5 +1,19 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single host device. Only launch/dryrun.py forces 512 devices.
+import pathlib
+import sys
+
+# The container may lack `hypothesis` (an optional dev dep, see
+# requirements-dev.txt). Install the deterministic shim before pytest
+# imports the property-test modules so collection never hard-crashes.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
+
 import jax
 import numpy as np
 import pytest

@@ -39,7 +39,9 @@ def test_halo_sl_step_matches_single_device():
         cfg = T.TransportConfig(interp="cubic_bspline", nt=4)
         foot = T.footpoints(pair.v_true, cfg)
         ref = SL.sl_step(pair.m0, foot, cfg.interp)
-        with jax.set_mesh(mesh):
+        # jax.set_mesh is 0.5+; shard_map carries the mesh explicitly and the
+        # 0.4.x Mesh context manager covers the ambient-mesh uses.
+        with mesh:
             sharded = jax.jit(halo_sl_step(mesh, halo=8))(pair.m0, foot)
         np.testing.assert_allclose(np.asarray(sharded), np.asarray(ref),
                                    rtol=5e-4, atol=5e-4)

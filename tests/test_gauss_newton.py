@@ -31,6 +31,7 @@ def test_pcg_solves_regularization_system():
     assert int(sol.iters) < 200
 
 
+@pytest.mark.slow
 def test_gn_converges_on_synthetic_pair():
     pair = synthetic.make_pair(jax.random.PRNGKey(1), SHAPE, amplitude=0.5)
     cfg = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4)
@@ -40,6 +41,7 @@ def test_gn_converges_on_synthetic_pair():
     assert res.rel_grad <= 5e-2
 
 
+@pytest.mark.slow
 def test_register_quality_metrics_in_paper_band():
     """Mismatch drops strongly; det F stays in the paper's healthy band
     (0 < min, max < ~10); GN iterations in the paper's 10-20 range or less
@@ -54,6 +56,7 @@ def test_register_quality_metrics_in_paper_band():
     assert res.iters <= 20
 
 
+@pytest.mark.slow
 def test_variants_agree_on_quality():
     """fd8-cubic vs fft-cubic produce nearly identical registrations
     (the paper's central claim, Table 7)."""
@@ -65,6 +68,7 @@ def test_variants_agree_on_quality():
     assert abs(r_fft.detF["max"] - r_fd8.detF["max"]) < 1.0
 
 
+@pytest.mark.slow
 def test_beta_continuation_runs():
     pair = synthetic.make_pair(jax.random.PRNGKey(4), SHAPE, amplitude=0.4)
     res = register(pair.m0, pair.m1, variant="fd8-cubic", max_newton=12,
@@ -73,6 +77,7 @@ def test_beta_continuation_runs():
     assert res.mismatch_rel < 1.0
 
 
+@pytest.mark.slow
 def test_gn_beats_first_order_baseline_per_iteration():
     """GN reaches a lower mismatch than the gradient-descent baseline at an
     equal (small) iteration budget — the paper's Table 8 argument."""
@@ -88,6 +93,7 @@ def test_gn_beats_first_order_baseline_per_iteration():
     assert gn_mis < gd_mis
 
 
+@pytest.mark.slow
 def test_mixed_precision_registration_matches_fp32():
     """bf16 interpolation weights (TPU analogue of the 9-bit texture path)
     do not degrade registration quality (paper Table 7 claim)."""

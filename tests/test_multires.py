@@ -1,0 +1,158 @@
+"""Multi-resolution pipeline: spectral transfers, grid continuation, batch.
+
+The fast tests exercise the restriction/prolongation algebra and the facade
+plumbing. The ``slow``-marked tests run full 16^3 registrations and verify
+the tentpole claims: grid continuation reaches single-level quality with
+fewer fine-grid Newton iterations, and the batched solver matches per-pair
+results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grid as G
+from repro.core import multires as MR
+from repro.data import synthetic
+
+
+def _band_limited(shape, kmax=3):
+    """Smooth field with all modes |k| <= kmax (well inside an 8^3 band)."""
+    x = G.coords(shape)
+    return (jnp.sin(x[0]) * jnp.cos(2 * x[1]) + jnp.sin(kmax * x[2])
+            + 0.5 * jnp.cos(x[0] + x[1]))
+
+
+# ---------------------------------------------------------------------------
+# spectral restriction / prolongation
+# ---------------------------------------------------------------------------
+
+
+def test_prolong_then_restrict_is_identity():
+    """R(P(f)) = f: prolongation adds only zero modes, restriction removes
+    exactly them."""
+    f = _band_limited((16, 16, 16))
+    up = MR.prolong(f, (32, 32, 32))
+    back = MR.restrict(up, (16, 16, 16))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(f), atol=5e-6)
+
+
+def test_restrict_then_prolong_recovers_band_limited():
+    """P(R(f)) = f when f is band-limited to the coarse grid."""
+    f = _band_limited((16, 16, 16), kmax=3)  # modes well below 8^3 Nyquist
+    down = MR.restrict(f, (8, 8, 8))
+    up = MR.prolong(down, (16, 16, 16))
+    np.testing.assert_allclose(np.asarray(up), np.asarray(f), atol=5e-6)
+
+
+def test_restrict_prolong_small_error_on_smooth_field():
+    """Smooth (spectrally decaying) fields lose little energy round-trip."""
+    v = synthetic.random_velocity(jax.random.PRNGKey(0), (16, 16, 16),
+                                  amplitude=1.0, sigma_vox=3.0)
+    up = MR.prolong(MR.restrict(v, (8, 8, 8)), (16, 16, 16))
+    rel = float(jnp.linalg.norm((up - v).ravel()) / jnp.linalg.norm(v.ravel()))
+    assert rel < 0.25, rel
+
+
+def test_resample_handles_vector_and_anisotropic_shapes():
+    v = jax.random.normal(jax.random.PRNGKey(1), (3, 12, 16, 8), jnp.float32)
+    down = MR.restrict(v, (6, 8, 4))
+    assert down.shape == (3, 6, 8, 4)
+    up = MR.prolong(down, (12, 16, 8))
+    assert up.shape == v.shape
+    # the coarse band survives the round trip exactly
+    np.testing.assert_allclose(np.asarray(MR.restrict(up, (6, 8, 4))),
+                               np.asarray(down), atol=1e-5)
+
+
+def test_resample_preserves_mean():
+    f = jax.random.normal(jax.random.PRNGKey(2), (16, 16, 16), jnp.float32)
+    for target in [(8, 8, 8), (24, 24, 24)]:
+        out = MR.fourier_resample(f, target)
+        np.testing.assert_allclose(float(jnp.mean(out)), float(jnp.mean(f)),
+                                   atol=1e-6)
+
+
+def test_default_level_shapes():
+    assert MR.default_level_shapes((16, 16, 16)) == [(8, 8, 8), (16, 16, 16)]
+    assert MR.default_level_shapes((64, 64, 64)) == [
+        (8, 8, 8), (16, 16, 16), (32, 32, 32), (64, 64, 64)]
+    assert MR.default_level_shapes((64, 64, 64), n_levels=2) == [
+        (32, 32, 32), (64, 64, 64)]
+    # too small to coarsen: single level
+    assert MR.default_level_shapes((8, 8, 8)) == [(8, 8, 8)]
+
+
+def test_solve_multires_rejects_bad_levels():
+    m = jnp.zeros((16, 16, 16))
+    from repro.core import transport as T
+    with pytest.raises(ValueError):
+        MR.solve_multires(m, m, T.TransportConfig(),
+                          levels=[(8, 8, 8), (12, 12, 12)])
+
+
+# ---------------------------------------------------------------------------
+# api facade plumbing (no solves)
+# ---------------------------------------------------------------------------
+
+
+def test_api_problem_validation():
+    from repro import api
+    m = jnp.zeros((8, 8, 8))
+    with pytest.raises(ValueError):
+        api.RegistrationProblem(m0=m, m1=jnp.zeros((8, 8, 4)))
+    p = api.RegistrationProblem(m0=m, m1=m)
+    assert not p.is_batched and p.grid == (8, 8, 8)
+    pb = api.RegistrationProblem(m0=jnp.zeros((2, 8, 8, 8)),
+                                 m1=jnp.zeros((2, 8, 8, 8)))
+    assert pb.is_batched and pb.batch_size == 2
+
+
+def test_api_options_mode_resolution():
+    from repro import api
+    assert api.SolverOptions().resolve_mode(True, (16, 16, 16)) == "batch"
+    assert api.SolverOptions().resolve_mode(False, (16, 16, 16)) == "multires"
+    assert api.SolverOptions().resolve_mode(False, (12, 12, 12)) == "single"
+    with pytest.raises(ValueError):
+        api.SolverOptions(mode="nope")
+    with pytest.raises(ValueError):
+        api.SolverOptions(mode="batch").resolve_mode(False, (16, 16, 16))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (slow tier): the tentpole acceptance claims at 16^3
+# ---------------------------------------------------------------------------
+
+SHAPE = (16, 16, 16)
+
+
+@pytest.mark.slow
+def test_multires_matches_single_level_with_fewer_fine_iters():
+    from repro.core.registration import register, register_multires
+
+    pair = synthetic.make_pair(jax.random.PRNGKey(7), SHAPE, amplitude=0.5)
+    single = register(pair.m0, pair.m1, variant="fd8-cubic", max_newton=20)
+    multi = register_multires(pair.m0, pair.m1, variant="fd8-cubic",
+                              max_newton=20)
+    assert multi.levels == [(8, 8, 8), (16, 16, 16)]
+    assert multi.fine_iters < single.iters
+    assert multi.mismatch_rel <= single.mismatch_rel * 1.05
+    assert multi.converged
+
+
+@pytest.mark.slow
+def test_register_batch_matches_per_pair_register():
+    from repro.core.registration import register, register_batch
+
+    pair = synthetic.make_pair(jax.random.PRNGKey(7), SHAPE, amplitude=0.5)
+    m0b = jnp.stack([pair.m0, pair.m1])  # forward + reverse problems
+    m1b = jnp.stack([pair.m1, pair.m0])
+    batched = register_batch(m0b, m1b, variant="fd8-cubic", max_newton=20)
+    fwd = register(pair.m0, pair.m1, variant="fd8-cubic", max_newton=20)
+    rev = register(pair.m1, pair.m0, variant="fd8-cubic", max_newton=20)
+    assert batched.iters == [fwd.iters, rev.iters]
+    assert abs(batched.mismatch_rel[0] - fwd.mismatch_rel) < 1e-5
+    assert abs(batched.mismatch_rel[1] - rev.mismatch_rel) < 1e-5
+    np.testing.assert_allclose(np.asarray(batched.v[0]), np.asarray(fwd.v),
+                               atol=1e-5)

@@ -12,12 +12,10 @@ from repro.configs import ARCHS
 from repro.distributed import sharding as shd
 from repro.models import build_model
 
-MESH_1POD = AbstractMesh(
-    (16, 16), ("data", "model"),
-    axis_types=(jax.sharding.AxisType.Auto,) * 2)
-MESH_2POD = AbstractMesh(
-    (2, 16, 16), ("pod", "data", "model"),
-    axis_types=(jax.sharding.AxisType.Auto,) * 3)
+# JAX 0.4.x API: AbstractMesh takes a ((name, size), ...) shape tuple and
+# has no AxisType (all axes behave as Auto); axis_types arrived in 0.5+.
+MESH_1POD = AbstractMesh((("data", 16), ("model", 16)))
+MESH_2POD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _axis_sizes(mesh):
