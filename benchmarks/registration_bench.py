@@ -196,17 +196,154 @@ def run_modes(
     return entry
 
 
+# ---------------------------------------------------------------------------
+# Hessian-matvec microbenchmark: the build-once/apply-many claim.
+#
+# Per Newton step the solver evaluates one gradient (which *builds* the
+# per-step invariants: footpoints, interpolation plans, grad(m_traj), div v)
+# and then spends up to ``max_pcg`` Hessian matvecs that only *apply* them.
+# This mode measures the per-matvec wall time with plans on vs off (and fp32
+# vs bf16 weights, jnp vs pallas backend) — the paper's Table 1 amortization,
+# demonstrated rather than asserted.
+# ---------------------------------------------------------------------------
+
+
+def run_matvec(
+    n: int = 16,
+    iters: int = 20,
+    seed: int = 7,
+    backends=("jnp",),
+    out: str = "BENCH_matvec.json",
+):
+    import numpy as np
+
+    from repro.core import gradient as GR
+    from repro.core import hessian as HS
+    from repro.core import transport as T
+    from repro.data import synthetic as S
+
+    grid = (n, n, n)
+    pair = synthetic.make_pair(jax.random.PRNGKey(seed), grid, amplitude=0.5)
+    v = 0.3 * S.random_velocity(jax.random.PRNGKey(seed + 1), grid)
+    vt = S.random_velocity(jax.random.PRNGKey(seed + 2), grid, amplitude=0.2)
+    beta, gamma = 5e-4, 1e-4
+
+    cases = []
+    for backend in backends:
+        for wd_name, wd in (("fp32", None), ("bf16", jnp.bfloat16)):
+            # plan-free first: it is the reference the deviations are
+            # measured against.
+            for use_plan in (False, True):
+                cases.append(dict(
+                    backend=backend, weights=wd_name, use_plan=use_plan,
+                    cfg=T.TransportConfig(interp="cubic_bspline", deriv="fd8",
+                                          nt=4, backend=backend,
+                                          weight_dtype=wd, use_plan=use_plan),
+                ))
+
+    # Reference answer for the deviation column: the plan-free jnp/fp32
+    # matvec, computed up front so every case (any --backends order/subset)
+    # is measured against it.
+    cfg_ref = T.TransportConfig(interp="cubic_bspline", deriv="fd8", nt=4,
+                                use_plan=False)
+    gs_ref = jax.jit(
+        lambda m0, m1, v: GR.evaluate(m0, m1, v, beta, gamma, cfg_ref)
+    )(pair.m0, pair.m1, v)
+    ref_hv = jax.jit(
+        lambda vt, gs, v: HS.matvec(vt, gs, v, beta, gamma, cfg_ref)
+    )(vt, gs_ref, v)
+
+    rows, records = [], []
+    for case in cases:
+        cfg = case["cfg"]
+
+        # Per-Newton-step setup: one gradient evaluation builds the plans,
+        # grad(m_traj) and div v that every matvec below reuses.
+        ev = jax.jit(lambda m0, m1, v: GR.evaluate(m0, m1, v, beta, gamma, cfg))
+        gs = jax.block_until_ready(ev(pair.m0, pair.m1, v))
+        t0 = time.perf_counter()
+        gs = jax.block_until_ready(ev(pair.m0, pair.m1, v))
+        evaluate_ms = (time.perf_counter() - t0) * 1e3
+
+        mv = jax.jit(lambda vt, gs, v: HS.matvec(vt, gs, v, beta, gamma, cfg))
+        hv = jax.block_until_ready(mv(vt, gs, v))  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hv = mv(vt, gs, v)
+        jax.block_until_ready(hv)
+        per_matvec_ms = (time.perf_counter() - t0) * 1e3 / iters
+
+        max_dev = float(jnp.max(jnp.abs(hv - ref_hv)))
+        rec = dict(
+            backend=case["backend"], weights=case["weights"],
+            use_plan=case["use_plan"], per_matvec_ms=per_matvec_ms,
+            evaluate_ms=evaluate_ms,
+            max_abs_dev_vs_plan_free_fp32=max_dev,
+        )
+        records.append(rec)
+        rows.append([
+            case["backend"], case["weights"],
+            "plan" if case["use_plan"] else "no-plan",
+            fmt(per_matvec_ms, 2), fmt(evaluate_ms, 2), fmt(max_dev),
+        ])
+
+    print_table(
+        f"Hessian matvec at {n}^3 (cubic B-spline, Nt=4): build-once plans + "
+        "cached grad(m_traj) vs per-matvec recomputation",
+        ["backend", "weights", "mode", "matvec ms", "eval ms", "|dev|"],
+        rows)
+
+    def _ms(backend, weights, use_plan):
+        for r in records:
+            if (r["backend"], r["weights"], r["use_plan"]) == (backend, weights, use_plan):
+                return r["per_matvec_ms"]
+        return None
+
+    speedup = None
+    on, off = _ms("jnp", "fp32", True), _ms("jnp", "fp32", False)
+    if on and off:
+        speedup = off / on
+        print(f"[bench] plan speedup (jnp fp32, {n}^3): {speedup:.2f}x "
+              f"({off:.2f} ms -> {on:.2f} ms per matvec)")
+
+    entry = dict(
+        ts=time.time(),
+        grid=list(grid),
+        nt=4,
+        iters=iters,
+        host_devices=jax.device_count(),
+        results=records,
+        plan_speedup_jnp_fp32=speedup,
+    )
+    _append_json(RESULTS_DIR / out, entry)
+    print(f"[bench] appended entry to {RESULTS_DIR / out}")
+
+    # acceptance: plan-based matvec strictly faster than plan-free at >= 16^3
+    if n >= 16 and speedup is not None:
+        assert speedup > 1.0, (
+            f"plan-based matvec not faster at {n}^3: {speedup:.2f}x")
+    return entry
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=["variants", "api-smoke"],
+    ap.add_argument("--mode", choices=["variants", "api-smoke", "matvec"],
                     default="variants")
     ap.add_argument("--grid", type=int, default=None)
     ap.add_argument("--max-newton", type=int, default=None)
     ap.add_argument("--variant", default="fd8-cubic")
+    ap.add_argument("--iters", type=int, default=20,
+                    help="matvec mode: timed matvecs per configuration")
+    ap.add_argument("--backends", default="jnp",
+                    help="matvec mode: comma list of kernel backends "
+                         "(jnp,pallas)")
     args = ap.parse_args(argv)
     if args.mode == "variants":
         run(args.grid or 32,
             **({"max_newton": args.max_newton} if args.max_newton else {}))
+    elif args.mode == "matvec":
+        run_matvec(n=args.grid or 16, iters=args.iters,
+                   backends=tuple(args.backends.split(",")))
     else:
         run_modes(n=args.grid or 16, max_newton=args.max_newton or 20,
                   variant=args.variant)

@@ -23,6 +23,10 @@ class SolverOptions:
     nt: int = 4
     backend: str = "jnp"
     mixed_precision: bool = False
+    # build-once/apply-many interpolation plans (per-Newton-step gather
+    # bases + weights reused by every SL step and PCG matvec); False selects
+    # the per-step recomputation reference path.
+    use_plan: bool = True
     # objective / Gauss-Newton
     beta: float = 5e-4
     gamma: float = 1e-4

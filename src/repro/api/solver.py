@@ -30,7 +30,7 @@ class Solver:
             variant=o.variant, beta=o.beta, gamma=o.gamma, nt=o.nt,
             tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
             backend=o.backend, mixed_precision=o.mixed_precision,
-            verbose=o.verbose,
+            use_plan=o.use_plan, verbose=o.verbose,
         )
         if mode == "batch":
             if o.continuation:

@@ -60,6 +60,10 @@ def _build_step(cfg: _tr.TransportConfig, gn: GNConfig):
     """Build the (untransformed) Newton step for a fixed numeric config."""
 
     def step(m0, m1, v, beta, gamma, eta):
+        # One gradient evaluation builds the per-Newton-step invariants
+        # (footpoints, interpolation plans, grad(m_traj), div v) that every
+        # PCG Hessian matvec below consumes through ``gs`` — the paper's
+        # build-once/apply-many amortization.
         gs = _grad.evaluate(m0, m1, v, beta, gamma, cfg)
         gnorm = _grid.norm_l2(gs.g)
 
@@ -73,6 +77,9 @@ def _build_step(cfg: _tr.TransportConfig, gn: GNConfig):
         gdotp = _grid.inner(gs.g, vt)
 
         def trial_obj(a):
+            # The trial velocity moves the footpoints, so the Newton-step
+            # plans cannot be reused here; solve_state still builds one plan
+            # per trial, shared by its Nt SL steps.
             return _obj.objective(m0, m1, v + a * vt, beta, gamma, cfg)
 
         def ls_cond(state):

@@ -17,7 +17,15 @@ from . import transport as _tr
 
 
 class GradientState(NamedTuple):
-    """Everything computed while evaluating g(v) that later stages reuse."""
+    """Everything computed while evaluating g(v) that later stages reuse.
+
+    ``plan_fwd`` / ``plan_adj`` / ``grad_m_traj`` are the per-Newton-step
+    invariants of the paper's Table-1 accounting: the interpolation plans
+    (gather bases + basis weights, fixed because the velocity is stationary)
+    and the stored-trajectory gradients. They are built once here and
+    consumed by every PCG Hessian matvec and transport solve at this iterate
+    (``None`` when ``cfg.use_plan`` is off).
+    """
 
     g: jnp.ndarray          # reduced gradient (3, N1,N2,N3)
     m_traj: jnp.ndarray     # state trajectory (Nt+1, N1,N2,N3)
@@ -27,6 +35,9 @@ class GradientState(NamedTuple):
     divv: jnp.ndarray       # div v (FD8/FFT per config)
     j_mismatch: jnp.ndarray
     j_reg: jnp.ndarray
+    plan_fwd: object = None       # InterpPlan for forward solves
+    plan_adj: object = None       # InterpPlan for backward solves
+    grad_m_traj: object = None    # (Nt+1, 3, N1,N2,N3) cached grad(m_traj)
 
 
 def evaluate(
@@ -40,12 +51,16 @@ def evaluate(
     foot_fwd = _tr.footpoints(v, cfg, sign=1.0)
     foot_adj = _tr.footpoints(v, cfg, sign=-1.0)
     divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend)
+    plan_fwd = _tr.interp_plan(foot_fwd, cfg)
+    plan_adj = _tr.interp_plan(foot_adj, cfg)
 
-    m_traj = _tr.solve_state(m0, v, cfg, foot=foot_fwd)
+    m_traj = _tr.solve_state(m0, v, cfg, foot=foot_fwd, plan=plan_fwd)
     lam1 = m1 - m_traj[-1]
-    lam_traj = _tr.solve_adjoint(lam1, v, cfg, foot_adj=foot_adj, divv=divv)
+    lam_traj = _tr.solve_adjoint(lam1, v, cfg, foot_adj=foot_adj, divv=divv,
+                                 plan_adj=plan_adj)
 
-    body = _tr.body_force(lam_traj, m_traj, cfg)
+    grad_m_traj = _tr.grad_traj(m_traj, cfg) if cfg.use_plan else None
+    body = _tr.body_force(lam_traj, m_traj, cfg, grad_m_traj=grad_m_traj)
     g = _spec.apply_regop(v, beta, gamma) + body
 
     from . import grid as _grid
@@ -61,4 +76,7 @@ def evaluate(
         divv=divv,
         j_mismatch=j_mis,
         j_reg=j_reg,
+        plan_fwd=plan_fwd,
+        plan_adj=plan_adj,
+        grad_m_traj=grad_m_traj,
     )

@@ -48,10 +48,11 @@ def prefilter_fir(f: jnp.ndarray) -> jnp.ndarray:
 
     Applied axis by axis with periodic wrap. This is an axis-aligned stencil
     exactly like the FD8 kernel (and is implemented as a Pallas pencil kernel
-    in ``repro.kernels.prefilter``).
+    in ``repro.kernels.prefilter``). Operates on the trailing three axes, so
+    stacked fields ``(..., N1, N2, N3)`` are filtered in one traced pass.
     """
     out = f
-    for axis in range(3):
+    for axis in range(f.ndim - 3, f.ndim):
         acc = PREFILTER_TAPS[PREFILTER_RADIUS] * out
         for k in range(1, PREFILTER_RADIUS + 1):
             c = PREFILTER_TAPS[PREFILTER_RADIUS + k]
@@ -110,6 +111,13 @@ def linear_weights(t: jnp.ndarray):
 # Gather-based evaluation
 # ---------------------------------------------------------------------------
 
+#: method -> (weight_fn, taps per axis, base index offset from floor(q))
+_METHOD_TABLE = {
+    "linear": (linear_weights, 2, 0),
+    "cubic_lagrange": (lagrange_weights, 4, -1),
+    "cubic_bspline": (bspline_weights, 4, -1),
+}
+
 
 def _gather(f_flat: jnp.ndarray, shape, i1, i2, i3):
     n1, n2, n3 = shape
@@ -119,7 +127,12 @@ def _gather(f_flat: jnp.ndarray, shape, i1, i2, i3):
 
 def _interp_separable(f: jnp.ndarray, q: jnp.ndarray, weight_fn, support: int,
                       base_offset: int, weight_dtype=None):
-    """Generic tensor-product interpolation with ``support`` taps per axis."""
+    """Generic tensor-product interpolation with ``support`` taps per axis.
+
+    Mixed precision follows the paper's texture scheme: only the basis
+    *weights* are downcast (``weight_dtype``); the field data stays at its
+    native precision and accumulation is fp32.
+    """
     shape = f.shape
     out_shape = q.shape[1:]
     qf = jnp.floor(q)
@@ -129,7 +142,6 @@ def _interp_separable(f: jnp.ndarray, q: jnp.ndarray, weight_fn, support: int,
     w2 = weight_fn(t[1])
     w3 = weight_fn(t[2])
     if weight_dtype is not None:
-        f = f.astype(weight_dtype)
         w1 = tuple(w.astype(weight_dtype) for w in w1)
         w2 = tuple(w.astype(weight_dtype) for w in w2)
         w3 = tuple(w.astype(weight_dtype) for w in w3)
@@ -183,18 +195,127 @@ def interp_field(f: jnp.ndarray, q: jnp.ndarray, method: str = "cubic_bspline",
 
 def interp_vector(w: jnp.ndarray, q: jnp.ndarray, method: str = "cubic_bspline",
                   prefiltered: bool = False, weight_dtype=None) -> jnp.ndarray:
-    """Interpolate a vector field component-wise; output (3, *q.shape[1:])."""
-    return jnp.stack(
-        [interp_field(w[a], q, method, prefiltered, weight_dtype) for a in range(3)],
-        axis=0,
-    )
+    """Interpolate a vector field in one batched pass; output (3, *q.shape[1:]).
+
+    All components share one interpolation plan (floor/mod/weights computed
+    once) and one batched gather instead of three traced copies.
+    """
+    coef = w if prefiltered else prefilter_for(w, method)
+    plan = build_plan(q, method=method, weight_dtype=weight_dtype,
+                      shape=w.shape[-3:])
+    return apply_plan(plan, coef)
 
 
 def prefilter_for(f: jnp.ndarray, method: str) -> jnp.ndarray:
     """Return interpolation coefficients for ``method`` (identity unless
-    B-spline)."""
+    B-spline). Leading batch axes are filtered in the same traced pass."""
     if method == "cubic_bspline":
-        if f.ndim == 4:
-            return jnp.stack([prefilter_fir(f[a]) for a in range(f.shape[0])], axis=0)
         return prefilter_fir(f)
     return f
+
+
+# ---------------------------------------------------------------------------
+# Interpolation plans: build once per velocity iterate, apply many times.
+#
+# For a stationary velocity the SL footpoints — and therefore the gather
+# indices and basis weights — are identical for every transport step and
+# every PCG Hessian matvec inside one Newton step (the paper's Table 1
+# accounting). A plan precomputes the flattened periodic gather bases and
+# the per-axis weight stacks so each application is a pure
+# gather-multiply-accumulate.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class InterpPlan:
+    """Precomputed tensor-product interpolation plan.
+
+    idx     : 3-tuple of int32 arrays (support, *out_shape) — per-axis flat
+              index contributions, periodic wrap and row strides baked in
+              (idx[0] premultiplied by N2*N3, idx[1] by N3).
+    weights : 3-tuple of arrays (support, *out_shape) — per-axis basis
+              weights, optionally downcast (bf16 mixed-precision path).
+    method / field_shape are static metadata (pytree aux), so plans pass
+    through jit/scan/vmap with the basis baked into the trace.
+    """
+
+    def __init__(self, idx, weights, method, field_shape):
+        self.idx = tuple(idx)
+        self.weights = tuple(weights)
+        self.method = method
+        self.field_shape = tuple(field_shape)
+
+    @property
+    def support(self) -> int:
+        return _METHOD_TABLE[self.method][1]
+
+    @property
+    def out_shape(self):
+        return self.idx[0].shape[1:]
+
+    def tree_flatten(self):
+        return (self.idx, self.weights), (self.method, self.field_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        idx, weights = children
+        return cls(idx, weights, *aux)
+
+
+def build_plan(q: jnp.ndarray, method: str = "cubic_bspline",
+               weight_dtype=None, shape=None) -> InterpPlan:
+    """Build an :class:`InterpPlan` for query points ``q`` (index units).
+
+    ``shape`` is the source-field shape; defaults to ``q.shape[1:]`` (the SL
+    solver interpolates fields on the same grid the footpoints live on).
+    ``weight_dtype`` downcasts the *weights only* (data precision and fp32
+    accumulation are unaffected — the paper's mixed-precision scheme).
+    """
+    if method not in _METHOD_TABLE:
+        raise ValueError(f"unknown interpolation method: {method}")
+    weight_fn, support, base_offset = _METHOD_TABLE[method]
+    shape = tuple(int(n) for n in (shape if shape is not None else q.shape[1:]))
+    n1, n2, n3 = shape
+    qf = jnp.floor(q)
+    t = q - qf
+    base = qf.astype(jnp.int32) + base_offset
+    tap = jnp.arange(support, dtype=jnp.int32).reshape(
+        (support,) + (1,) * (q.ndim - 1))
+    idx1 = jnp.mod(base[0][None] + tap, n1) * (n2 * n3)
+    idx2 = jnp.mod(base[1][None] + tap, n2) * n3
+    idx3 = jnp.mod(base[2][None] + tap, n3)
+    w1 = jnp.stack(weight_fn(t[0]), axis=0)
+    w2 = jnp.stack(weight_fn(t[1]), axis=0)
+    w3 = jnp.stack(weight_fn(t[2]), axis=0)
+    if weight_dtype is not None:
+        w1 = w1.astype(weight_dtype)
+        w2 = w2.astype(weight_dtype)
+        w3 = w3.astype(weight_dtype)
+    return InterpPlan((idx1, idx2, idx3), (w1, w2, w3), method, shape)
+
+
+def apply_plan(plan: InterpPlan, coef: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate interpolation ``coef`` through a prebuilt plan (fp32 accum).
+
+    ``coef`` may carry arbitrary leading batch axes (``(..., N1, N2, N3)``);
+    all stacked fields are gathered through the same plan in one pass.
+    Returns ``coef.shape[:-3] + plan.out_shape`` in float32.
+    """
+    if tuple(coef.shape[-3:]) != plan.field_shape:
+        raise ValueError(
+            f"field shape {coef.shape[-3:]} != plan field shape {plan.field_shape}")
+    support = plan.support
+    i1, i2, i3 = plan.idx
+    w1, w2, w3 = plan.weights
+    lead = coef.shape[:-3]
+    f_flat = coef.reshape(lead + (-1,))
+    acc = jnp.zeros(lead + tuple(plan.out_shape), dtype=jnp.float32)
+    for a in range(support):
+        ia = i1[a]
+        for b in range(support):
+            iab = ia + i2[b]
+            wab = w1[a] * w2[b]
+            for c in range(support):
+                vals = jnp.take(f_flat, iab + i3[c], axis=-1)
+                acc = acc + (wab * w3[c] * vals).astype(jnp.float32)
+    return acc

@@ -174,6 +174,7 @@ def solve_multires(
     coarse_tol: Optional[float] = None,
     level_newton: Optional[Sequence[int]] = None,
     level_cfgs: Optional[Sequence[_tr.TransportConfig]] = None,
+    level_weight_dtypes: Optional[Sequence] = None,
     presmooth_sigma: float = 0.0,
     verbose: bool = False,
 ) -> MultiresResult:
@@ -187,6 +188,12 @@ def solve_multires(
     level_newton  : per-level Newton budgets (default: ``gn.max_newton`` each).
     level_cfgs    : per-level transport configs (e.g. cheap trilinear interp
                     on coarse levels, cubic on the finest).
+    level_weight_dtypes : per-level interpolation *weight* dtypes layered on
+                    top of ``cfg``/``level_cfgs`` — e.g. ``jnp.bfloat16`` on
+                    coarse levels (the paper's reduced-precision texture
+                    weights, harmless where the solve is only a warm start)
+                    and ``None`` (fp32) on the finest. The downcast applies
+                    to the plan weights only; data stays full precision.
     presmooth_sigma : optional Gaussian smoothing (voxels, finest grid) of the
                     *images* before restriction; the spectral truncation is
                     already an ideal low-pass, so this is off by default.
@@ -199,6 +206,12 @@ def solve_multires(
         raise ValueError("level_newton must have one entry per level")
     if level_cfgs is not None and len(level_cfgs) != len(levels):
         raise ValueError("level_cfgs must have one entry per level")
+    if level_weight_dtypes is not None:
+        if len(level_weight_dtypes) != len(levels):
+            raise ValueError("level_weight_dtypes must have one entry per level")
+        base = list(level_cfgs) if level_cfgs is not None else [cfg] * len(levels)
+        level_cfgs = [c._replace(weight_dtype=wd)
+                      for c, wd in zip(base, level_weight_dtypes)]
 
     m0_s = _spec.gauss_smooth(m0, presmooth_sigma) if presmooth_sigma > 0 else m0
     m1_s = _spec.gauss_smooth(m1, presmooth_sigma) if presmooth_sigma > 0 else m1

@@ -28,7 +28,14 @@ def objective(
     gamma: float,
     cfg: _tr.TransportConfig,
     foot: jnp.ndarray | None = None,
+    plan=None,
 ) -> jnp.ndarray:
-    """J(v) per eq. (1a); solves the state equation internally."""
-    m_traj = _tr.solve_state(m0, v, cfg, foot=foot)
+    """J(v) per eq. (1a); solves the state equation internally.
+
+    ``foot`` / ``plan`` let callers reuse footpoints (and their
+    interpolation plan) when ``v`` matches the iterate they were traced for;
+    otherwise ``solve_state`` traces footpoints for this ``v`` and builds
+    one plan that is shared by all Nt SL steps of the evaluation.
+    """
+    m_traj = _tr.solve_state(m0, v, cfg, foot=foot, plan=plan)
     return mismatch(m_traj[-1], m1) + _spec.reg_energy(v, beta, gamma)

@@ -52,7 +52,11 @@ def make_transport_config(
     nt: int = 4,
     backend: str = "jnp",
     mixed_precision: bool = False,
+    use_plan: bool = True,
 ) -> _tr.TransportConfig:
+    """``use_plan=False`` disables the build-once/apply-many interpolation
+    plans (per-step weight recomputation; the pre-plan reference path, kept
+    for benchmarking and regression tests)."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; choose from {sorted(VARIANTS)}")
     sel = VARIANTS[variant]
@@ -62,6 +66,7 @@ def make_transport_config(
         nt=nt,
         backend=backend,
         weight_dtype=jnp.bfloat16 if mixed_precision else None,
+        use_plan=use_plan,
     )
 
 
@@ -77,6 +82,7 @@ def register(
     continuation: bool = False,
     backend: str = "jnp",
     mixed_precision: bool = False,
+    use_plan: bool = True,
     verbose: bool = False,
 ) -> RegistrationResult:
     """Register template ``m0`` to reference ``m1`` (paper eq. (1)).
@@ -84,7 +90,8 @@ def register(
     Returns the stationary velocity ``v`` and the paper's quality metrics.
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
-                                mixed_precision=mixed_precision)
+                                mixed_precision=mixed_precision,
+                                use_plan=use_plan)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -145,6 +152,7 @@ def register_multires(
     presmooth_sigma: float = 0.0,
     backend: str = "jnp",
     mixed_precision: bool = False,
+    use_plan: bool = True,
     verbose: bool = False,
 ) -> MultiresRegistrationResult:
     """Coarse-to-fine registration (CLAIRE grid continuation).
@@ -155,7 +163,8 @@ def register_multires(
     ``"fd8-linear"``) on all but the finest level.
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
-                                mixed_precision=mixed_precision)
+                                mixed_precision=mixed_precision,
+                                use_plan=use_plan)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -169,7 +178,8 @@ def register_multires(
     level_cfgs = None
     if coarse_variant is not None:
         coarse_cfg = make_transport_config(coarse_variant, nt=nt, backend=backend,
-                                           mixed_precision=mixed_precision)
+                                           mixed_precision=mixed_precision,
+                                           use_plan=use_plan)
         level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
     res = _mr.solve_multires(
         m0, m1, cfg, gn_cfg,
@@ -224,6 +234,7 @@ def register_batch(
     max_newton: int = 50,
     backend: str = "jnp",
     mixed_precision: bool = False,
+    use_plan: bool = True,
     verbose: bool = False,
 ) -> BatchRegistrationResult:
     """Register a batch of pairs ``m0[b] -> m1[b]`` with one vmapped solver.
@@ -235,7 +246,8 @@ def register_batch(
     workload of the multi-node CLAIRE follow-up.
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
-                                mixed_precision=mixed_precision)
+                                mixed_precision=mixed_precision,
+                                use_plan=use_plan)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,

@@ -31,14 +31,21 @@ _METHOD_TO_BASIS = {
 
 
 def _prefilter_dispatch(f, method, backend):
-    """Interpolation coefficients for ``method`` (B-spline prefilter or id)."""
+    """Interpolation coefficients for ``method`` (B-spline prefilter or id).
+
+    Stacked fields ``(..., N1, N2, N3)`` are filtered in one batched pass
+    (single traced stencil for the XLA path, vmapped pencil kernel for
+    Pallas) instead of one traced copy per component.
+    """
     if method != "cubic_bspline":
         return f
     if backend == "pallas":
         from repro.kernels.prefilter import prefilter as _pk
 
-        if f.ndim == 4:
-            return jnp.stack([_pk.prefilter3d_pallas(f[a]) for a in range(f.shape[0])])
+        if f.ndim > 3:
+            lead = f.shape[:-3]
+            flat = jax.vmap(_pk.prefilter3d_pallas)(f.reshape((-1,) + f.shape[-3:]))
+            return flat.reshape(lead + f.shape[-3:])
         return _pk.prefilter3d_pallas(f)
     return _interp.prefilter_for(f, method)
 
@@ -55,6 +62,28 @@ def _interp_dispatch(coef, q, method, weight_dtype, backend):
         )
     return _interp.interp_field(coef, q, method, prefiltered=True,
                                 weight_dtype=weight_dtype)
+
+
+def build_plan(foot: jnp.ndarray, method: str, weight_dtype=None,
+               shape=None) -> _interp.InterpPlan:
+    """Precompute the interpolation plan for footpoints ``foot``.
+
+    For a stationary velocity the footpoints are fixed for an entire solve
+    (and an entire Newton step), so the gather indices and basis weights are
+    built once here and reused by every SL step and every Hessian matvec
+    (see ``repro.core.interp.build_plan``).
+    """
+    return _interp.build_plan(foot, method=method, weight_dtype=weight_dtype,
+                              shape=shape)
+
+
+def _apply_plan_dispatch(plan, coef, backend):
+    """Apply a prebuilt plan to (stacked) coefficients via XLA or Pallas."""
+    if backend == "pallas":
+        from repro.kernels.interp3d import interp3d as _k
+
+        return _k.apply_plan_pallas(coef, plan)
+    return _interp.apply_plan(plan, coef)
 
 
 def trace_characteristic(
@@ -80,9 +109,10 @@ def trace_characteristic(
     # midpoint (index units): x - sign*dt/2*v, converted by /h
     q_mid = x_idx - sign * (0.5 * dt) * v / h
     v_coef = _prefilter_dispatch(v, method, backend)
-    v_mid = jnp.stack(
-        [_interp_dispatch(v_coef[a], q_mid, method, weight_dtype, backend)
-         for a in range(3)], axis=0)
+    # One plan shared by all three components: a single batched
+    # gather-multiply-accumulate instead of three traced copies.
+    plan_mid = build_plan(q_mid, method, weight_dtype, shape=shape)
+    v_mid = _apply_plan_dispatch(plan_mid, v_coef, backend)
     return x_idx - sign * dt * v_mid / h
 
 
@@ -92,14 +122,42 @@ def sl_step(
     method: str = "cubic_bspline",
     weight_dtype=None,
     backend: str = "jnp",
+    plan: _interp.InterpPlan | None = None,
 ) -> jnp.ndarray:
     """One semi-Lagrangian advection step: f_new(x) = f(X(x)).
 
     ``f`` is the *raw* field; prefiltering (if the method needs it) happens
-    here because f changes every step.
+    here because f changes every step. When a prebuilt ``plan`` (built from
+    ``foot``) is given, the footpoints are not re-processed: the step is a
+    pure gather-multiply-accumulate through the plan.
     """
     coef = _prefilter_dispatch(f, method, backend)
+    if plan is not None:
+        return _apply_plan_dispatch(plan, coef, backend)
     return _interp_dispatch(coef, foot, method, weight_dtype, backend)
+
+
+def sl_step_many(
+    fs: jnp.ndarray,
+    foot: jnp.ndarray,
+    method: str = "cubic_bspline",
+    weight_dtype=None,
+    backend: str = "jnp",
+    plan: _interp.InterpPlan | None = None,
+) -> jnp.ndarray:
+    """Advect stacked scalar fields ``(K, N1, N2, N3)`` in one fused pass.
+
+    All fields share the same footpoints, so with a plan the whole stack is
+    one batched gather; without one, the components fall back to per-field
+    interpolation (the weights are still recomputed only once per call by
+    the XLA CSE, but not shared across calls).
+    """
+    coef = _prefilter_dispatch(fs, method, backend)
+    if plan is not None:
+        return _apply_plan_dispatch(plan, coef, backend)
+    return jnp.stack(
+        [_interp_dispatch(coef[k], foot, method, weight_dtype, backend)
+         for k in range(fs.shape[0])], axis=0)
 
 
 def sl_step_with_source(
@@ -111,6 +169,7 @@ def sl_step_with_source(
     method: str = "cubic_bspline",
     weight_dtype=None,
     backend: str = "jnp",
+    plan: _interp.InterpPlan | None = None,
 ) -> jnp.ndarray:
     """SL step for  d f / dt = s  along characteristics (Heun / RK2):
 
@@ -122,10 +181,15 @@ def sl_step_with_source(
     the footpoints); ``source_coeff_t1`` is a *pointwise multiplier* c(x) such
     that s_t1(f) = c * f at the arrival point (this covers both the adjoint
     equation, where s = -f * div v, and lets callers pass c = 0 for plain
-    advection).
+    advection). With a ``plan``, f and the source are advected through one
+    batched plan application.
     """
-    f_adv = sl_step(f, foot, method, weight_dtype, backend)
-    k1 = sl_step(source_t0, foot, method, weight_dtype, backend)
+    if plan is not None:
+        f_adv, k1 = sl_step_many(jnp.stack([f, source_t0]), foot, method,
+                                 weight_dtype, backend, plan=plan)
+    else:
+        f_adv = sl_step(f, foot, method, weight_dtype, backend)
+        k1 = sl_step(source_t0, foot, method, weight_dtype, backend)
     f_pred = f_adv + dt * k1
     k2 = source_coeff_t1 * f_pred
     return f_adv + 0.5 * dt * (k1 + k2)

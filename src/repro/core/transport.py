@@ -34,6 +34,12 @@ class TransportConfig(NamedTuple):
     backend      : "jnp" | "pallas"          (kernel dispatch)
     weight_dtype : None (fp32) or jnp.bfloat16 (mixed-precision interpolation
                    weights — the TPU analogue of the paper's 9-bit texture path)
+    use_plan     : build interpolation plans once per solve / Newton step and
+                   reuse them for every SL step and PCG matvec (the paper's
+                   build-once/apply-many amortization); ``False`` recomputes
+                   weights and trajectory gradients from scratch each step
+                   (the pre-plan reference path, kept for regression testing
+                   and benchmarking).
     """
 
     interp: str = "cubic_bspline"
@@ -41,6 +47,7 @@ class TransportConfig(NamedTuple):
     nt: int = 4
     backend: str = "jnp"
     weight_dtype: object = None
+    use_plan: bool = True
 
 
 def _dt(cfg: TransportConfig) -> float:
@@ -60,6 +67,27 @@ def footpoints(v: jnp.ndarray, cfg: TransportConfig, sign: float = 1.0) -> jnp.n
     )
 
 
+def interp_plan(foot: jnp.ndarray, cfg: TransportConfig):
+    """Interpolation plan for fixed footpoints (None when plans are off)."""
+    if not cfg.use_plan:
+        return None
+    return _sl.build_plan(foot, cfg.interp, cfg.weight_dtype,
+                          shape=foot.shape[-3:])
+
+
+def grad_traj(m_traj: jnp.ndarray, cfg: TransportConfig) -> jnp.ndarray:
+    """Spatial gradients of a stored trajectory, shape (Nt+1, 3, N1, N2, N3).
+
+    ``m_traj`` is fixed within a Newton step, so its gradients are a
+    per-Newton-step invariant: computing them here once removes 3*(Nt+1) FD8
+    stencil sweeps from ``solve_inc_state`` *and again* from ``body_force``
+    in every PCG Hessian matvec.
+    """
+    return jax.vmap(
+        lambda m: _deriv.grad(m, scheme=cfg.deriv, backend=cfg.backend)
+    )(m_traj)
+
+
 # ---------------------------------------------------------------------------
 # State equation:  dm/dt + v . grad m = 0,  m(0) = m0.
 # Returns the full trajectory (needed by gradient and Hessian matvec).
@@ -67,13 +95,22 @@ def footpoints(v: jnp.ndarray, cfg: TransportConfig, sign: float = 1.0) -> jnp.n
 
 
 def solve_state(
-    m0: jnp.ndarray, v: jnp.ndarray, cfg: TransportConfig, foot: jnp.ndarray | None = None
+    m0: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: TransportConfig,
+    foot: jnp.ndarray | None = None,
+    plan=None,
 ) -> jnp.ndarray:
-    if foot is None:
+    if foot is None and plan is None:
         foot = footpoints(v, cfg, sign=1.0)
+    if plan is None:
+        # Build once, before the time loop: the plan is reused by all Nt
+        # steps (and by the caller's Hessian matvecs when passed in).
+        plan = interp_plan(foot, cfg)
 
     def step(m, _):
-        m_new = _sl.sl_step(m, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
+        m_new = _sl.sl_step(m, foot, cfg.interp, cfg.weight_dtype, cfg.backend,
+                            plan=plan)
         return m_new, m_new
 
     _, traj = jax.lax.scan(step, m0, None, length=cfg.nt)
@@ -95,9 +132,12 @@ def solve_adjoint(
     cfg: TransportConfig,
     foot_adj: jnp.ndarray | None = None,
     divv: jnp.ndarray | None = None,
+    plan_adj=None,
 ) -> jnp.ndarray:
-    if foot_adj is None:
+    if foot_adj is None and plan_adj is None:
         foot_adj = footpoints(v, cfg, sign=-1.0)
+    if plan_adj is None:
+        plan_adj = interp_plan(foot_adj, cfg)
     if divv is None:
         divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend)
     dt = _dt(cfg)
@@ -105,7 +145,8 @@ def solve_adjoint(
     def step(lam, _):
         src0 = divv * lam
         lam_new = _sl.sl_step_with_source(
-            lam, src0, divv, foot_adj, dt, cfg.interp, cfg.weight_dtype, cfg.backend
+            lam, src0, divv, foot_adj, dt, cfg.interp, cfg.weight_dtype,
+            cfg.backend, plan=plan_adj
         )
         return lam_new, lam_new
 
@@ -130,22 +171,36 @@ def solve_inc_state(
     m_traj: jnp.ndarray,
     cfg: TransportConfig,
     foot: jnp.ndarray | None = None,
+    plan=None,
+    grad_m_traj: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    if foot is None:
+    if foot is None and plan is None:
         foot = footpoints(v, cfg, sign=1.0)
+    if plan is None:
+        plan = interp_plan(foot, cfg)
     dt = _dt(cfg)
 
-    def src(m_t):
-        g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend)
-        return -(vt[0] * g[0] + vt[1] * g[1] + vt[2] * g[2])
+    if grad_m_traj is not None:
+        # m_traj is fixed across all PCG matvecs of a Newton step; with its
+        # cached gradients the source term is pointwise algebra only.
+        sources = -jnp.sum(vt[None] * grad_m_traj, axis=1)
+    else:
+        def src(m_t):
+            g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend)
+            return -(vt[0] * g[0] + vt[1] * g[1] + vt[2] * g[2])
 
-    sources = jax.vmap(src)(m_traj)  # (Nt+1, N1,N2,N3)
+        sources = jax.vmap(src)(m_traj)  # (Nt+1, N1,N2,N3)
     mt0 = jnp.zeros_like(m_traj[0])
 
     def step(mt, js):
         s0, s1 = js
-        mt_adv = _sl.sl_step(mt, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
-        s0_adv = _sl.sl_step(s0, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
+        if plan is not None:
+            mt_adv, s0_adv = _sl.sl_step_many(
+                jnp.stack([mt, s0]), foot, cfg.interp, cfg.weight_dtype,
+                cfg.backend, plan=plan)
+        else:
+            mt_adv = _sl.sl_step(mt, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
+            s0_adv = _sl.sl_step(s0, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
         mt_new = mt_adv + 0.5 * dt * (s0_adv + s1)
         return mt_new, None
 
@@ -165,8 +220,10 @@ def solve_inc_adjoint(
     cfg: TransportConfig,
     foot_adj: jnp.ndarray | None = None,
     divv: jnp.ndarray | None = None,
+    plan_adj=None,
 ) -> jnp.ndarray:
-    return solve_adjoint(-mt1, v, cfg, foot_adj=foot_adj, divv=divv)
+    return solve_adjoint(-mt1, v, cfg, foot_adj=foot_adj, divv=divv,
+                         plan_adj=plan_adj)
 
 
 # ---------------------------------------------------------------------------
@@ -177,17 +234,30 @@ def solve_inc_adjoint(
 
 
 def body_force(
-    lam_traj: jnp.ndarray, m_traj: jnp.ndarray, cfg: TransportConfig
+    lam_traj: jnp.ndarray,
+    m_traj: jnp.ndarray,
+    cfg: TransportConfig,
+    grad_m_traj: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     dt = _dt(cfg)
     nt1 = m_traj.shape[0]
     w = jnp.full((nt1,), dt, dtype=m_traj.dtype).at[0].set(0.5 * dt).at[-1].set(0.5 * dt)
+    acc0 = jnp.zeros((3,) + m_traj.shape[1:], dtype=m_traj.dtype)
+
+    if grad_m_traj is not None:
+        # Cached trajectory gradients (per-Newton-step invariant): the
+        # integral reduces to a weighted pointwise multiply-accumulate.
+        def step_cached(acc, args):
+            w_t, lam_t, g_t = args
+            return acc + w_t * lam_t[None] * g_t, None
+
+        acc, _ = jax.lax.scan(step_cached, acc0, (w, lam_traj, grad_m_traj))
+        return acc
 
     def step(acc, args):
         w_t, lam_t, m_t = args
         g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend)
         return acc + w_t * lam_t[None] * g, None
 
-    acc0 = jnp.zeros((3,) + m_traj.shape[1:], dtype=m_traj.dtype)
     acc, _ = jax.lax.scan(step, acc0, (w, lam_traj, m_traj))
     return acc

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.prefilter.ops import prefilter3d
-from .interp3d import interp3d_pallas
+from .interp3d import apply_plan_pallas, interp3d_pallas
 
 
 @partial(jax.jit, static_argnames=("displacement_bound", "interpret"))
@@ -38,3 +38,24 @@ def interp_cubic_bspline(f, q, displacement_bound: int = 6,
     return interp3d_pallas(f, q, basis="cubic_bspline",
                            displacement_bound=displacement_bound,
                            interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Build-once/apply-many plan entries. A plan (``repro.core.interp.build_plan``)
+# amortizes the per-Newton-step invariants (floor, periodic wrap, weight
+# polynomials) across all transport steps and PCG Hessian matvecs; these
+# wrappers run the fused gather-multiply-accumulate as a Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def interp_apply_plan(coef, plan, interpret=None):
+    """Evaluate one scalar coefficient field through a prebuilt plan."""
+    return apply_plan_pallas(coef, plan, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def interp_apply_plan_batched(coefs, plan, interpret=None):
+    """Evaluate stacked coefficient fields ``(..., N1, N2, N3)`` through one
+    shared plan (vector fields, SL field+source pairs) in a single call."""
+    return apply_plan_pallas(coefs, plan, interpret=interpret)

@@ -93,3 +93,82 @@ def test_vector_interp_matches_per_component():
     for a in range(3):
         np.testing.assert_allclose(out[a], I.interp_linear(w[a], q),
                                    atol=1e-6)
+
+
+def test_vector_interp_bspline_matches_per_component():
+    """The fused (one plan + batched prefilter) vector path reproduces the
+    per-component scalar path, including the B-spline prefilter."""
+    w = jax.random.normal(jax.random.PRNGKey(10), (3,) + SHAPE, jnp.float32)
+    q = G.index_coords(SHAPE) + 0.4
+    out = I.interp_vector(w, q, "cubic_bspline")
+    for a in range(3):
+        np.testing.assert_allclose(
+            out[a], I.interp_cubic_bspline(w[a], q), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Interpolation plans (build once / apply many)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), method=st.sampled_from(I.METHODS))
+def test_plan_matches_interp_field_fp32(seed, method):
+    """apply_plan(build_plan(q), c) == interp_field(c, q) in fp32: the plan
+    precomputes exactly the indices/weights the direct path derives per call,
+    so the results must agree bitwise-tolerantly."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    coef = jax.random.normal(k1, SHAPE, jnp.float32)
+    q = G.index_coords(SHAPE) + jax.random.uniform(
+        k2, (3,) + SHAPE, minval=-4.0, maxval=4.0)
+    ref = I.interp_field(coef, q, method, prefiltered=True)
+    out = I.apply_plan(I.build_plan(q, method=method), coef)
+    np.testing.assert_allclose(out, ref, rtol=1e-7, atol=1e-7)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), method=st.sampled_from(I.METHODS))
+def test_plan_bf16_weights_close_to_fp32(seed, method):
+    """bf16 *weight* downcast (data stays fp32, accumulation fp32) keeps the
+    result within bf16 resolution of the full-precision path."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    coef = jax.random.normal(k1, SHAPE, jnp.float32)
+    q = G.index_coords(SHAPE) + jax.random.uniform(
+        k2, (3,) + SHAPE, minval=-2.0, maxval=2.0)
+    ref = I.apply_plan(I.build_plan(q, method=method), coef)
+    out = I.apply_plan(I.build_plan(q, method=method,
+                                    weight_dtype=jnp.bfloat16), coef)
+    rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-12))
+    assert rel < 3e-2, f"{method}: bf16 weight error {rel}"
+
+
+def test_plan_batched_apply_matches_per_field():
+    """Stacked fields through one plan == one apply per field."""
+    w = jax.random.normal(jax.random.PRNGKey(11), (4,) + SHAPE, jnp.float32)
+    q = G.index_coords(SHAPE) - 0.6
+    plan = I.build_plan(q, method="cubic_lagrange")
+    out = I.apply_plan(plan, w)
+    assert out.shape == (4,) + SHAPE
+    for k in range(4):
+        np.testing.assert_allclose(out[k], I.apply_plan(plan, w[k]), atol=0.0)
+
+
+def test_plan_periodic_wrap_baked_in():
+    """Plans bake the periodic wrap into the gather base: shifting queries by
+    a full period yields the identical plan application."""
+    f = jax.random.normal(jax.random.PRNGKey(12), SHAPE, jnp.float32)
+    q = G.index_coords(SHAPE) + 0.37
+    shift = jnp.asarray(SHAPE, jnp.float32).reshape(3, 1, 1, 1)
+    out1 = I.apply_plan(I.build_plan(q, method="cubic_bspline"), f)
+    out2 = I.apply_plan(I.build_plan(q + shift, method="cubic_bspline"), f)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_prefilter_fir_batched_matches_per_field():
+    """The prefilter operates on trailing axes: stacked fields in one pass."""
+    w = jax.random.normal(jax.random.PRNGKey(13), (3,) + SHAPE, jnp.float32)
+    out = I.prefilter_for(w, "cubic_bspline")
+    for a in range(3):
+        np.testing.assert_allclose(out[a], I.prefilter_fir(w[a]), atol=1e-6)
