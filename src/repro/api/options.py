@@ -8,12 +8,17 @@ batched problems and multi-resolution for grids large enough to coarsen.
 
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core import registration as _reg
 
 MODES = ("auto", "single", "multires", "batch")
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """JSON-safe mesh record (axis -> size), shared by options and results."""
+    return {name: int(mesh.shape[name]) for name in mesh.axis_names}
 
 
 @dataclass(frozen=True)
@@ -35,6 +40,15 @@ class SolverOptions:
     continuation: bool = False
     # solve strategy
     mode: str = "auto"
+    # slab-distributed solving (repro.distributed): a jax.sharding.Mesh
+    # whose ``slab_axis`` shards the grid's x1 axis and (for batched
+    # problems) ``ensemble_axis`` shards the pairs. None = single-device.
+    # ``halo`` is the SL interpolation halo width in voxels (CFL bound +
+    # stencil margin; FD8/prefilter halos are derived internally).
+    mesh: object = None
+    slab_axis: Optional[str] = None
+    ensemble_axis: Optional[str] = None
+    halo: int = 6
     # multi-resolution schedule (mode "multires" or "auto")
     levels: Optional[Sequence[Tuple[int, int, int]]] = None
     n_levels: Optional[int] = None
@@ -54,6 +68,9 @@ class SolverOptions:
             )
         if self.coarse_variant is not None and self.coarse_variant not in _reg.VARIANTS:
             raise ValueError(f"unknown coarse_variant {self.coarse_variant!r}")
+        if self.mesh is not None and self.backend != "jnp":
+            raise ValueError(
+                "slab-distributed solving (mesh=...) requires backend='jnp'")
 
     def resolve_mode(self, is_batched: bool, grid: Tuple[int, int, int]) -> str:
         """Concrete solve strategy for a problem of the given shape."""
@@ -72,9 +89,13 @@ class SolverOptions:
         return "single"
 
     def to_dict(self) -> Dict:
-        d = asdict(self)
+        # asdict() deep-copies field values, and jax Mesh/Device objects are
+        # not copyable — serialize the mesh separately as axis -> size.
+        d = asdict(replace(self, mesh=None))
         if d["levels"] is not None:
             d["levels"] = [list(s) for s in d["levels"]]
         if d["level_newton"] is not None:
             d["level_newton"] = list(d["level_newton"])
+        if self.mesh is not None:
+            d["mesh"] = mesh_axis_sizes(self.mesh)
         return d

@@ -39,6 +39,8 @@ class Result:
     level_results: Optional[list] = None
     dice_before: Optional[Any] = None
     dice_after: Optional[Any] = None
+    # slab-distributed solves: mesh axis -> size (None for single-device)
+    mesh: Optional[Dict[str, int]] = None
 
     def to_dict(self) -> Dict:
         """JSON-serializable summary (arrays and per-iteration logs omitted)."""
@@ -62,6 +64,8 @@ class Result:
         if self.dice_before is not None:
             d["dice_before"] = self.dice_before
             d["dice_after"] = self.dice_after
+        if self.mesh is not None:
+            d["mesh"] = dict(self.mesh)
         return d
 
     def summary(self) -> str:

@@ -107,7 +107,19 @@ def spectral_div(w: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def grad(f: jnp.ndarray, scheme: str = "fd8", backend: Backend = "jnp") -> jnp.ndarray:
+def grad(f: jnp.ndarray, scheme: str = "fd8", backend: Backend = "jnp",
+         shard=None) -> jnp.ndarray:
+    """``shard`` (a ``halo.ShardInfo``, inside ``shard_map``) switches to the
+    slab-distributed operators: FD8 becomes a width-4 halo exchange + local
+    stencil, FFT becomes all-gather + local transform + slice."""
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        if scheme == "fd8":
+            return _halo.fd8_grad(f, shard)
+        if scheme == "fft":
+            return _halo.spectral_grad(f, shard)
+        raise ValueError(f"unknown derivative scheme: {scheme}")
     if scheme == "fd8":
         return fd8_grad(f, backend=backend)
     if scheme == "fft":
@@ -115,7 +127,16 @@ def grad(f: jnp.ndarray, scheme: str = "fd8", backend: Backend = "jnp") -> jnp.n
     raise ValueError(f"unknown derivative scheme: {scheme}")
 
 
-def div(w: jnp.ndarray, scheme: str = "fd8", backend: Backend = "jnp") -> jnp.ndarray:
+def div(w: jnp.ndarray, scheme: str = "fd8", backend: Backend = "jnp",
+        shard=None) -> jnp.ndarray:
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        if scheme == "fd8":
+            return _halo.fd8_div(w, shard)
+        if scheme == "fft":
+            return _halo.spectral_div(w, shard)
+        raise ValueError(f"unknown derivative scheme: {scheme}")
     if scheme == "fd8":
         return fd8_div(w, backend=backend)
     if scheme == "fft":

@@ -65,16 +65,17 @@ def _build_step(cfg: _tr.TransportConfig, gn: GNConfig):
         # PCG Hessian matvec below consumes through ``gs`` — the paper's
         # build-once/apply-many amortization.
         gs = _grad.evaluate(m0, m1, v, beta, gamma, cfg)
-        gnorm = _grid.norm_l2(gs.g)
+        gnorm = _grid.norm_l2(gs.g, shard=cfg.shard)
 
         mv = partial(_hess.matvec, gs=gs, v=v, beta=beta, gamma=gamma, cfg=cfg)
-        precond = _pcg.make_reg_preconditioner(beta, gamma)
-        sol = _pcg.solve(mv, -gs.g, precond, tol=eta, max_iters=gn.max_pcg)
+        precond = _pcg.make_reg_preconditioner(beta, gamma, shard=cfg.shard)
+        sol = _pcg.solve(mv, -gs.g, precond, tol=eta, max_iters=gn.max_pcg,
+                         shard=cfg.shard)
         vt = sol.x
 
         # Armijo backtracking: J(v + a*vt) <= J(v) + c1*a*<g, vt>.
         j0 = gs.j_mismatch + gs.j_reg
-        gdotp = _grid.inner(gs.g, vt)
+        gdotp = _grid.inner(gs.g, vt, shard=cfg.shard)
 
         def trial_obj(a):
             # The trial velocity moves the footpoints, so the Newton-step
@@ -154,6 +155,7 @@ def solve(
     gnorm_ref: float | None = None,
     eta0: float | None = None,
     verbose: bool = False,
+    step_fn=None,
 ) -> GNResult:
     """Run the Gauss-Newton-Krylov solver  g(v) = 0  for v.
 
@@ -168,10 +170,17 @@ def solve(
     adapt). Grid continuation passes the coarse level's final relative
     gradient here so the first warm-started step is solved tightly instead
     of at the loose cold-start cap.
+
+    ``step_fn`` injects a pre-built jitted Newton step with the signature of
+    :func:`_make_step` — the slab-distributed driver passes its
+    ``shard_map``-wrapped step here so the whole outer iteration (stopping
+    test, continuation ladder, Eisenstat-Walker forcing, logging) is shared
+    between the single-device and the sharded solve.
     """
     shape = m0.shape
     v = v0 if v0 is not None else jnp.zeros((3,) + shape, dtype=m0.dtype)
-    step_fn = _make_step(cfg, gn)
+    if step_fn is None:
+        step_fn = _make_step(cfg, gn)
 
     # beta-continuation ladder (decade steps down to the target beta).
     if gn.continuation and gn.beta_init > gn.beta:
@@ -293,6 +302,7 @@ def solve_batch(
     gn: GNConfig = GNConfig(),
     v0: jnp.ndarray | None = None,
     verbose: bool = False,
+    step_fn=None,
 ) -> BatchGNResult:
     """Solve ``B`` independent registrations with one vmapped Newton step.
 
@@ -309,7 +319,7 @@ def solve_batch(
     bsz = m0.shape[0]
     shape = m0.shape[1:]
     v = v0 if v0 is not None else jnp.zeros((bsz, 3) + shape, dtype=m0.dtype)
-    bstep = _make_batch_step(cfg, gn)
+    bstep = step_fn if step_fn is not None else _make_batch_step(cfg, gn)
 
     active = np.ones(bsz, dtype=bool)
     ever_converged = np.zeros(bsz, dtype=bool)

@@ -50,7 +50,7 @@ def evaluate(
 ) -> GradientState:
     foot_fwd = _tr.footpoints(v, cfg, sign=1.0)
     foot_adj = _tr.footpoints(v, cfg, sign=-1.0)
-    divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend)
+    divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend, shard=cfg.shard)
     plan_fwd = _tr.interp_plan(foot_fwd, cfg)
     plan_adj = _tr.interp_plan(foot_adj, cfg)
 
@@ -61,12 +61,12 @@ def evaluate(
 
     grad_m_traj = _tr.grad_traj(m_traj, cfg) if cfg.use_plan else None
     body = _tr.body_force(lam_traj, m_traj, cfg, grad_m_traj=grad_m_traj)
-    g = _spec.apply_regop(v, beta, gamma) + body
+    g = _spec.apply_regop(v, beta, gamma, shard=cfg.shard) + body
 
     from . import grid as _grid
 
-    j_mis = 0.5 * _grid.inner(lam1, lam1)
-    j_reg = _spec.reg_energy(v, beta, gamma)
+    j_mis = 0.5 * _grid.inner(lam1, lam1, shard=cfg.shard)
+    j_reg = _spec.reg_energy(v, beta, gamma, shard=cfg.shard)
     return GradientState(
         g=g,
         m_traj=m_traj,

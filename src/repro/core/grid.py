@@ -47,19 +47,30 @@ def index_coords(shape: Sequence[int], dtype=jnp.float32) -> jnp.ndarray:
     return jnp.stack(grids, axis=0)
 
 
-def inner(a: jnp.ndarray, b: jnp.ndarray, shape: Sequence[int] | None = None) -> jnp.ndarray:
+def inner(a: jnp.ndarray, b: jnp.ndarray, shape: Sequence[int] | None = None,
+          shard=None) -> jnp.ndarray:
     """Discrete L2 inner product with quadrature weight h1*h2*h3.
 
-    Works for scalar or vector fields (sums over all axes).
+    Works for scalar or vector fields (sums over all axes). With ``shard``
+    (a ``repro.distributed.halo.ShardInfo``, inside ``shard_map``), ``a`` and
+    ``b`` are x1 slabs: the quadrature weight uses the *global* grid and the
+    local partial sum is ``psum``-reduced over the slab axis, so the result
+    is the global inner product, replicated on every shard.
     """
     if shape is None:
         shape = a.shape[-3:]
+    if shard is not None:
+        shape = (shape[0] * shard.nshards,) + tuple(shape[1:])
     w = cell_volume(shape)
-    return w * jnp.sum(a * b)
+    s = jnp.sum(a * b)
+    if shard is not None:
+        s = jax.lax.psum(s, shard.axis)
+    return w * s
 
 
-def norm_l2(a: jnp.ndarray, shape: Sequence[int] | None = None) -> jnp.ndarray:
-    return jnp.sqrt(inner(a, a, shape))
+def norm_l2(a: jnp.ndarray, shape: Sequence[int] | None = None,
+            shard=None) -> jnp.ndarray:
+    return jnp.sqrt(inner(a, a, shape, shard=shard))
 
 
 def wavenumbers(shape: Sequence[int], dtype=jnp.float32, rfft: bool = True):

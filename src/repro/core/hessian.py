@@ -37,4 +37,4 @@ def matvec(
     lt_traj = _tr.solve_inc_adjoint(mt1, v, cfg, foot_adj=gs.foot_adj,
                                     divv=gs.divv, plan_adj=gs.plan_adj)
     body = _tr.body_force(lt_traj, gs.m_traj, cfg, grad_m_traj=gs.grad_m_traj)
-    return _spec.apply_regop(vt, beta, gamma) + body
+    return _spec.apply_regop(vt, beta, gamma, shard=cfg.shard) + body

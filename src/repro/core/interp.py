@@ -263,13 +263,18 @@ class InterpPlan:
 
 
 def build_plan(q: jnp.ndarray, method: str = "cubic_bspline",
-               weight_dtype=None, shape=None) -> InterpPlan:
+               weight_dtype=None, shape=None,
+               wrap=(True, True, True)) -> InterpPlan:
     """Build an :class:`InterpPlan` for query points ``q`` (index units).
 
     ``shape`` is the source-field shape; defaults to ``q.shape[1:]`` (the SL
     solver interpolates fields on the same grid the footpoints live on).
     ``weight_dtype`` downcasts the *weights only* (data precision and fp32
     accumulation are unaffected — the paper's mixed-precision scheme).
+    ``wrap`` selects per-axis periodic index wrap; a non-wrapped axis clamps
+    tap indices into the field instead — used by the distributed halo path,
+    where the x1 axis of the source is a halo-extended (non-periodic) slab
+    and the CFL contract keeps in-range queries exact.
     """
     if method not in _METHOD_TABLE:
         raise ValueError(f"unknown interpolation method: {method}")
@@ -281,9 +286,14 @@ def build_plan(q: jnp.ndarray, method: str = "cubic_bspline",
     base = qf.astype(jnp.int32) + base_offset
     tap = jnp.arange(support, dtype=jnp.int32).reshape(
         (support,) + (1,) * (q.ndim - 1))
-    idx1 = jnp.mod(base[0][None] + tap, n1) * (n2 * n3)
-    idx2 = jnp.mod(base[1][None] + tap, n2) * n3
-    idx3 = jnp.mod(base[2][None] + tap, n3)
+
+    def _tap_idx(b, n, do_wrap):
+        i = b[None] + tap
+        return jnp.mod(i, n) if do_wrap else jnp.clip(i, 0, n - 1)
+
+    idx1 = _tap_idx(base[0], n1, wrap[0]) * (n2 * n3)
+    idx2 = _tap_idx(base[1], n2, wrap[1]) * n3
+    idx3 = _tap_idx(base[2], n3, wrap[2])
     w1 = jnp.stack(weight_fn(t[0]), axis=0)
     w2 = jnp.stack(weight_fn(t[1]), axis=0)
     w3 = jnp.stack(weight_fn(t[2]), axis=0)

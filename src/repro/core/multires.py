@@ -177,6 +177,7 @@ def solve_multires(
     level_weight_dtypes: Optional[Sequence] = None,
     presmooth_sigma: float = 0.0,
     verbose: bool = False,
+    solve_fn=None,
 ) -> MultiresResult:
     """Coarse-to-fine Gauss-Newton: solve each pyramid level, prolong, refine.
 
@@ -197,6 +198,13 @@ def solve_multires(
     presmooth_sigma : optional Gaussian smoothing (voxels, finest grid) of the
                     *images* before restriction; the spectral truncation is
                     already an ideal low-pass, so this is off by default.
+    solve_fn      : per-level solver with the keyword signature of
+                    ``gauss_newton.solve(m0, m1, cfg, gn, v0=, gnorm_ref=,
+                    eta0=, verbose=)``; defaults to it. The slab-distributed
+                    driver injects a closure that re-shards each level's
+                    images and warm-start velocity onto the mesh, so the
+                    restrict/prolong ladder preserves slab shardings across
+                    levels.
     """
     shape = tuple(int(n) for n in m0.shape)
     levels = [tuple(int(n) for n in s) for s in (levels or default_level_shapes(shape))]
@@ -246,8 +254,9 @@ def solve_multires(
             eta0 = min(gn.forcing_max, level_results[-1].rel_grad ** 0.5)
         if verbose:
             print(f"[multires] level {li}: {lev} (warm={'yes' if v0 is not None else 'no'})")
-        res = _gn.solve(m0_l, m1_l, cfg_l, gn_l, v0=v0, gnorm_ref=gnorm_ref,
-                        eta0=eta0, verbose=verbose)
+        _solve = solve_fn if solve_fn is not None else _gn.solve
+        res = _solve(m0_l, m1_l, cfg_l, gn_l, v0=v0, gnorm_ref=gnorm_ref,
+                     eta0=eta0, verbose=verbose)
         if gnorm_ref is None and res.gnorm0 > 0:
             gnorm_ref = res.gnorm0
         v = res.v

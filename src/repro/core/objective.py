@@ -9,10 +9,10 @@ from . import spectral as _spec
 from . import transport as _tr
 
 
-def mismatch(m_final: jnp.ndarray, m1: jnp.ndarray) -> jnp.ndarray:
-    """0.5 * || m(.,1) - m1 ||_L2^2."""
+def mismatch(m_final: jnp.ndarray, m1: jnp.ndarray, shard=None) -> jnp.ndarray:
+    """0.5 * || m(.,1) - m1 ||_L2^2 (global; psum-reduced when sharded)."""
     r = m_final - m1
-    return 0.5 * _grid.inner(r, r)
+    return 0.5 * _grid.inner(r, r, shard=shard)
 
 
 def relative_mismatch(m_final: jnp.ndarray, m1: jnp.ndarray, m0: jnp.ndarray) -> jnp.ndarray:
@@ -38,4 +38,5 @@ def objective(
     one plan that is shared by all Nt SL steps of the evaluation.
     """
     m_traj = _tr.solve_state(m0, v, cfg, foot=foot, plan=plan)
-    return mismatch(m_traj[-1], m1) + _spec.reg_energy(v, beta, gamma)
+    return (mismatch(m_traj[-1], m1, shard=cfg.shard)
+            + _spec.reg_energy(v, beta, gamma, shard=cfg.shard))

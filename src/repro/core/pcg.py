@@ -33,11 +33,18 @@ def solve(
     precond: Callable[[jnp.ndarray], jnp.ndarray],
     tol: jnp.ndarray | float,
     max_iters: int = 500,
+    shard=None,
 ) -> PCGResult:
-    """Solve  M^-1 H x = M^-1 b  to  ||r|| <= tol * ||b||  (L2 on the grid)."""
+    """Solve  M^-1 H x = M^-1 b  to  ||r|| <= tol * ||b||  (L2 on the grid).
+
+    With ``shard`` (slab-distributed solve inside ``shard_map``) every inner
+    product is psum-reduced over the slab axis, so alpha/beta and the
+    stopping test are identical replicated scalars on every shard and all
+    shards run the same trip count.
+    """
 
     shape = b.shape[-3:]
-    inner = partial(_grid.inner, shape=shape)
+    inner = partial(_grid.inner, shape=shape, shard=shard)
 
     x0 = jnp.zeros_like(b)
     r0 = b  # r = b - H x, x0 = 0
@@ -72,10 +79,12 @@ def solve(
     return PCGResult(x=x, iters=k, rel_residual=rel)
 
 
-def make_reg_preconditioner(beta: float, gamma: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+def make_reg_preconditioner(beta: float, gamma: float,
+                            shard=None) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """(beta*A)^-1 spectral preconditioner (Algorithm 2.1 'Preconditioner')."""
 
     def precond(r: jnp.ndarray) -> jnp.ndarray:
-        return _spec.apply_inv_regop(r, beta, gamma, zero_mean_identity=True)
+        return _spec.apply_inv_regop(r, beta, gamma, zero_mean_identity=True,
+                                     shard=shard)
 
     return precond

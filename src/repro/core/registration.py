@@ -34,6 +34,40 @@ VARIANTS: Dict[str, Dict[str, str]] = {
 }
 
 
+def _unshard(v, mesh):
+    """Replicate a slab-sharded velocity for post-solve scoring.
+
+    ``device_put`` to the fully-replicated sharding gathers in place (and,
+    unlike a host round trip, stays valid for non-fully-addressable arrays
+    on multi-process meshes).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.device_put(v, NamedSharding(mesh, PartitionSpec()))
+
+
+def _score_single(m0, m1, v, cfg):
+    """Post-solve quality metrics (warped image, rel. mismatch, det F)."""
+    m_warped = _metrics.warp_image(m0, v, cfg)
+    mis = float(_obj.relative_mismatch(m_warped, m1, m0))
+    detf = {k: float(val) for k, val in _metrics.detF_stats(v, cfg).items()}
+    return m_warped, mis, detf
+
+
+def _score_batch(m0, m1, v, cfg):
+    """Batched post-solve scoring: one dispatch for all pairs."""
+    bsz = m0.shape[0]
+    m_warped = jax.vmap(lambda m, w: _metrics.warp_image(m, w, cfg))(m0, v)
+    mis = [
+        float(_obj.relative_mismatch(m_warped[b], m1[b], m0[b])) for b in range(bsz)
+    ]
+    detf_b = jax.vmap(lambda w: _metrics.detF_stats(w, cfg))(v)
+    detf = [
+        {k: float(detf_b[k][b]) for k in detf_b} for b in range(bsz)
+    ]
+    return m_warped, mis, detf
+
+
 class RegistrationResult(NamedTuple):
     v: jnp.ndarray                 # stationary velocity field (3, N1, N2, N3)
     m_warped: jnp.ndarray          # m0 transported to t=1
@@ -100,9 +134,7 @@ def register(
         continuation=continuation,
     )
     res = _gn.solve(m0, m1, cfg, gn_cfg, verbose=verbose)
-    m_warped = _metrics.warp_image(m0, res.v, cfg)
-    mis = float(_obj.relative_mismatch(m_warped, m1, m0))
-    detf = {k: float(val) for k, val in _metrics.detF_stats(res.v, cfg).items()}
+    m_warped, mis, detf = _score_single(m0, m1, res.v, cfg)
     return RegistrationResult(
         v=res.v,
         m_warped=m_warped,
@@ -190,9 +222,7 @@ def register_multires(
         presmooth_sigma=presmooth_sigma,
         verbose=verbose,
     )
-    m_warped = _metrics.warp_image(m0, res.v, cfg)
-    mis = float(_obj.relative_mismatch(m_warped, m1, m0))
-    detf = {k: float(val) for k, val in _metrics.detF_stats(res.v, cfg).items()}
+    m_warped, mis, detf = _score_single(m0, m1, res.v, cfg)
     return MultiresRegistrationResult(
         v=res.v,
         m_warped=m_warped,
@@ -255,16 +285,8 @@ def register_batch(
         max_newton=max_newton,
     )
     res = _gn.solve_batch(m0, m1, cfg, gn_cfg, verbose=verbose)
-    bsz = m0.shape[0]
     # Post-solve scoring stays batched too: one dispatch for all pairs.
-    m_warped = jax.vmap(lambda m, v: _metrics.warp_image(m, v, cfg))(m0, res.v)
-    mis = [
-        float(_obj.relative_mismatch(m_warped[b], m1[b], m0[b])) for b in range(bsz)
-    ]
-    detf_b = jax.vmap(lambda v: _metrics.detF_stats(v, cfg))(res.v)
-    detf = [
-        {k: float(detf_b[k][b]) for k in detf_b} for b in range(bsz)
-    ]
+    m_warped, mis, detf = _score_batch(m0, m1, res.v, cfg)
     return BatchRegistrationResult(
         v=res.v,
         m_warped=m_warped,
@@ -274,6 +296,163 @@ def register_batch(
         matvecs=[int(m) for m in res.matvecs],
         rel_grad=[float(r) for r in res.rel_grad],
         converged=[bool(c) for c in res.converged],
+        wall_time_s=res.wall_time_s,
+        history=res.history,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Slab-distributed registration: the full Gauss-Newton-Krylov loop under
+# shard_map on an (ensemble, slab) mesh (see repro.distributed.claire_dist).
+# ---------------------------------------------------------------------------
+
+
+def register_sharded(
+    m0: jnp.ndarray,
+    m1: jnp.ndarray,
+    mesh,
+    variant: str = "fd8-cubic",
+    beta: float = 5e-4,
+    gamma: float = 1e-4,
+    nt: int = 4,
+    tol_rel_grad: float = 5e-2,
+    max_newton: int = 50,
+    continuation: bool = False,
+    slab_axis: Optional[str] = None,
+    ensemble_axis: Optional[str] = None,
+    halo: int = 6,
+    multires: bool = False,
+    levels: Optional[Sequence[Tuple[int, int, int]]] = None,
+    n_levels: Optional[int] = None,
+    min_size: int = 8,
+    coarse_tol: Optional[float] = None,
+    level_newton: Optional[Sequence[int]] = None,
+    coarse_variant: Optional[str] = None,
+    presmooth_sigma: float = 0.0,
+    mixed_precision: bool = False,
+    use_plan: bool = True,
+    verbose: bool = False,
+):
+    """Register with the grid sharded in x1 slabs over ``mesh``.
+
+    The entire Gauss-Newton-Krylov solve runs under ``shard_map``: FD8 and
+    semi-Lagrangian interpolation exchange explicit CFL-bounded halos,
+    spectral operators fall back to all-gather + local FFT, and inner
+    products are psum reductions — matching the single-device
+    :func:`register` to floating-point reduction noise (see
+    ``repro.distributed.claire_dist``).
+
+    Dispatch mirrors the single-device entry points:
+      * ``m0.ndim == 3``                -> slab-parallel :func:`register`
+      * ``m0.ndim == 3`` + ``multires`` (or ``levels``) -> slab-parallel
+        :func:`register_multires`; each level re-shards its restricted
+        images and prolonged warm start onto the same slab axes.
+      * ``m0.ndim == 4``                -> ensemble x slab :func:`register_batch`
+        (pairs over ``ensemble_axis``, grid over ``slab_axis``).
+
+    ``halo`` is the interpolation halo width in voxels and is a *contract*:
+    every per-step footpoint displacement along x1 must stay within
+    ``halo - 2`` voxels (cubic stencil margin; FD8 and prefilter halos are
+    derived internally). Out-of-contract footpoints are clamped to the
+    exchanged slab — the solve still runs but values near slab boundaries
+    silently degrade versus :func:`register`, exactly like exceeding the
+    Pallas kernel's ``PALLAS_DISPLACEMENT_BOUND``. The solver regime
+    (``|v| dt / h`` of a few voxels) satisfies the default; raise ``halo``
+    for aggressive velocities. Post-solve metrics are computed on the
+    gathered velocity.
+    """
+    from repro.distributed import claire_dist as _dist
+
+    cfg = make_transport_config(variant, nt=nt, backend="jnp",
+                                mixed_precision=mixed_precision,
+                                use_plan=use_plan)
+    gn_cfg = _gn.GNConfig(
+        beta=beta,
+        gamma=gamma,
+        tol_rel_grad=tol_rel_grad,
+        max_newton=max_newton,
+        continuation=continuation,
+    )
+
+    if m0.ndim == 4:
+        if multires or levels is not None:
+            raise ValueError("batched sharded registration has no multires mode")
+        res = _dist.solve_ensemble_slab(
+            m0, m1, cfg, gn_cfg, mesh=mesh, ens_axis=ensemble_axis,
+            slab_axis=slab_axis, halo=halo, verbose=verbose)
+        v = _unshard(res.v, mesh)
+        m_warped, mis, detf = _score_batch(m0, m1, v, cfg)
+        return BatchRegistrationResult(
+            v=v,
+            m_warped=m_warped,
+            mismatch_rel=mis,
+            detF=detf,
+            iters=[int(i) for i in res.iters],
+            matvecs=[int(m) for m in res.matvecs],
+            rel_grad=[float(r) for r in res.rel_grad],
+            converged=[bool(c) for c in res.converged],
+            wall_time_s=res.wall_time_s,
+            history=res.history,
+        )
+
+    if multires or levels is not None:
+        if levels is None:
+            levels = _mr.default_level_shapes(m0.shape, n_levels=n_levels,
+                                              min_size=min_size)
+        level_cfgs = None
+        if coarse_variant is not None:
+            coarse_cfg = make_transport_config(
+                coarse_variant, nt=nt, backend="jnp",
+                mixed_precision=mixed_precision, use_plan=use_plan)
+            level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
+
+        def solve_fn(m0_l, m1_l, cfg_l, gn_l, **kw):
+            # Re-shard each level onto the mesh: restrict/prolong run on the
+            # gathered fields, the level solve is slab-parallel again.
+            return _dist.solve_slab(m0_l, m1_l, cfg_l, gn_l, mesh=mesh,
+                                    slab_axis=slab_axis, halo=halo, **kw)
+
+        res = _mr.solve_multires(
+            m0, m1, cfg, gn_cfg,
+            levels=levels,
+            coarse_tol=coarse_tol,
+            level_newton=level_newton,
+            level_cfgs=level_cfgs,
+            presmooth_sigma=presmooth_sigma,
+            verbose=verbose,
+            solve_fn=solve_fn,
+        )
+        v = _unshard(res.v, mesh)
+        m_warped, mis, detf = _score_single(m0, m1, v, cfg)
+        return MultiresRegistrationResult(
+            v=v,
+            m_warped=m_warped,
+            mismatch_rel=mis,
+            detF=detf,
+            iters=res.iters,
+            fine_iters=res.fine_iters,
+            matvecs=res.matvecs,
+            rel_grad=res.rel_grad,
+            converged=res.converged,
+            wall_time_s=res.wall_time_s,
+            levels=list(res.levels),
+            level_results=list(res.level_results),
+            history=res.history,
+        )
+
+    res = _dist.solve_slab(m0, m1, cfg, gn_cfg, mesh=mesh,
+                           slab_axis=slab_axis, halo=halo, verbose=verbose)
+    v = _unshard(res.v, mesh)
+    m_warped, mis, detf = _score_single(m0, m1, v, cfg)
+    return RegistrationResult(
+        v=v,
+        m_warped=m_warped,
+        mismatch_rel=mis,
+        detF=detf,
+        iters=res.iters,
+        matvecs=res.matvecs,
+        rel_grad=res.rel_grad,
+        converged=res.converged,
         wall_time_s=res.wall_time_s,
         history=res.history,
     )

@@ -93,6 +93,7 @@ def trace_characteristic(
     sign: float = 1.0,
     weight_dtype=None,
     backend: str = "jnp",
+    shard=None,
 ) -> jnp.ndarray:
     """RK2 (midpoint) backward trace of the characteristic.
 
@@ -100,8 +101,15 @@ def trace_characteristic(
 
     ``sign=+1`` traces along +v (state equation); ``sign=-1`` traces along -v
     (adjoint equation in reversed pseudo-time). Returns footpoints in *index
-    units*, shape (3, N1, N2, N3).
+    units*, shape (3, N1, N2, N3). With ``shard`` (inside ``shard_map``),
+    ``v`` is an x1 slab and the returned footpoints are global coordinates of
+    the local grid points (halo-local midpoint interpolation).
     """
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        return _halo.trace_characteristic(v, dt, method, sign, weight_dtype,
+                                          shard)
     shape = v.shape[-3:]
     h = jnp.asarray(_grid.spacing(shape), dtype=v.dtype).reshape(3, 1, 1, 1)
     x_idx = _grid.index_coords(shape, dtype=v.dtype)
@@ -123,14 +131,23 @@ def sl_step(
     weight_dtype=None,
     backend: str = "jnp",
     plan: _interp.InterpPlan | None = None,
+    shard=None,
 ) -> jnp.ndarray:
     """One semi-Lagrangian advection step: f_new(x) = f(X(x)).
 
     ``f`` is the *raw* field; prefiltering (if the method needs it) happens
     here because f changes every step. When a prebuilt ``plan`` (built from
     ``foot``) is given, the footpoints are not re-processed: the step is a
-    pure gather-multiply-accumulate through the plan.
+    pure gather-multiply-accumulate through the plan. With ``shard`` the
+    step is slab-local: CFL-bounded halo exchange of the (prefiltered)
+    coefficients, then a local plan application (see ``distributed.halo``).
     """
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        if plan is None:
+            plan = _halo.build_plan(foot, method, weight_dtype, shard)
+        return _halo.apply_plan(plan, f, method, shard)
     coef = _prefilter_dispatch(f, method, backend)
     if plan is not None:
         return _apply_plan_dispatch(plan, coef, backend)
@@ -144,6 +161,7 @@ def sl_step_many(
     weight_dtype=None,
     backend: str = "jnp",
     plan: _interp.InterpPlan | None = None,
+    shard=None,
 ) -> jnp.ndarray:
     """Advect stacked scalar fields ``(K, N1, N2, N3)`` in one fused pass.
 
@@ -152,6 +170,12 @@ def sl_step_many(
     interpolation (the weights are still recomputed only once per call by
     the XLA CSE, but not shared across calls).
     """
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        if plan is None:
+            plan = _halo.build_plan(foot, method, weight_dtype, shard)
+        return _halo.apply_plan(plan, fs, method, shard)
     coef = _prefilter_dispatch(fs, method, backend)
     if plan is not None:
         return _apply_plan_dispatch(plan, coef, backend)
@@ -170,6 +194,7 @@ def sl_step_with_source(
     weight_dtype=None,
     backend: str = "jnp",
     plan: _interp.InterpPlan | None = None,
+    shard=None,
 ) -> jnp.ndarray:
     """SL step for  d f / dt = s  along characteristics (Heun / RK2):
 
@@ -184,9 +209,9 @@ def sl_step_with_source(
     advection). With a ``plan``, f and the source are advected through one
     batched plan application.
     """
-    if plan is not None:
+    if plan is not None or shard is not None:
         f_adv, k1 = sl_step_many(jnp.stack([f, source_t0]), foot, method,
-                                 weight_dtype, backend, plan=plan)
+                                 weight_dtype, backend, plan=plan, shard=shard)
     else:
         f_adv = sl_step(f, foot, method, weight_dtype, backend)
         k1 = sl_step(source_t0, foot, method, weight_dtype, backend)

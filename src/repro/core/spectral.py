@@ -57,8 +57,17 @@ def _vec_irfftn(vh: jnp.ndarray, shape, dtype):
     )
 
 
-def apply_regop(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
-    """A v = beta*(-Lap) v + gamma * k (k . vhat)  (vector field -> vector field)."""
+def apply_regop(v: jnp.ndarray, beta: float, gamma: float, shard=None) -> jnp.ndarray:
+    """A v = beta*(-Lap) v + gamma * k (k . vhat)  (vector field -> vector field).
+
+    With ``shard`` (inside ``shard_map``), ``v`` is an x1 slab and the
+    operator runs on the all-gathered field and returns the local slab — the
+    distributed-FFT fallback (see ROADMAP open items).
+    """
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        return _halo.spectral_op(lambda f: apply_regop(f, beta, gamma), v, shard)
     shape = v.shape[-3:]
     ks, k2, _ = _khat(shape)
     vh = _vec_rfftn(v)
@@ -68,7 +77,8 @@ def apply_regop(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
 
 
 def apply_inv_regop(
-    v: jnp.ndarray, beta: float, gamma: float, zero_mean_identity: bool = True
+    v: jnp.ndarray, beta: float, gamma: float, zero_mean_identity: bool = True,
+    shard=None
 ) -> jnp.ndarray:
     """A^-1 v via the Sherman–Morrison closed form (see module docstring).
 
@@ -76,6 +86,12 @@ def apply_inv_regop(
     (A is singular on constants); this matches using A + P0 where P0 projects
     onto the mean — the standard CLAIRE preconditioner treatment.
     """
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        return _halo.spectral_op(
+            lambda f: apply_inv_regop(f, beta, gamma, zero_mean_identity),
+            v, shard)
     shape = v.shape[-3:]
     ks, k2, kt2 = _khat(shape)
     vh = _vec_rfftn(v)
@@ -107,8 +123,16 @@ def leray_project(v: jnp.ndarray) -> jnp.ndarray:
     return _vec_irfftn(out, shape, v.dtype)
 
 
-def reg_energy(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
-    """0.5 * <A v, v>  =  0.5*beta*|grad v|^2 + 0.5*gamma*|div v|^2 (spectral)."""
+def reg_energy(v: jnp.ndarray, beta: float, gamma: float, shard=None) -> jnp.ndarray:
+    """0.5 * <A v, v>  =  0.5*beta*|grad v|^2 + 0.5*gamma*|div v|^2 (spectral).
+
+    Sharded: evaluated on the all-gathered field (the gather is needed for
+    the spectral operator anyway), so the scalar is replicated per shard."""
+    if shard is not None:
+        from repro.distributed import halo as _halo
+
+        full = _halo.gather_full(v, shard)
+        return reg_energy(full, beta, gamma)
     av = apply_regop(v, beta, gamma)
     return 0.5 * _grid.inner(av, v, v.shape[-3:])
 

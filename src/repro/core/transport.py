@@ -40,6 +40,11 @@ class TransportConfig(NamedTuple):
                    weights and trajectory gradients from scratch each step
                    (the pre-plan reference path, kept for regression testing
                    and benchmarking).
+    shard        : ``repro.distributed.halo.ShardInfo`` or None. When set,
+                   every transport solve runs on x1-slab-local fields inside
+                   ``shard_map``: FD8 and SL interpolation communicate via
+                   explicit halo exchanges, spectral operators via all-gather
+                   (see ``repro.distributed``). Requires ``backend="jnp"``.
     """
 
     interp: str = "cubic_bspline"
@@ -48,6 +53,7 @@ class TransportConfig(NamedTuple):
     backend: str = "jnp"
     weight_dtype: object = None
     use_plan: bool = True
+    shard: object = None
 
 
 def _dt(cfg: TransportConfig) -> float:
@@ -63,14 +69,22 @@ def _dt(cfg: TransportConfig) -> float:
 def footpoints(v: jnp.ndarray, cfg: TransportConfig, sign: float = 1.0) -> jnp.ndarray:
     return _sl.trace_characteristic(
         v, _dt(cfg), method=cfg.interp, sign=sign, weight_dtype=cfg.weight_dtype,
-        backend=cfg.backend
+        backend=cfg.backend, shard=cfg.shard
     )
 
 
 def interp_plan(foot: jnp.ndarray, cfg: TransportConfig):
-    """Interpolation plan for fixed footpoints (None when plans are off)."""
+    """Interpolation plan for fixed footpoints (None when plans are off).
+
+    Sharded configs build the plan in the halo-extended slab frame, so every
+    later application is a local gather (``distributed.halo.build_plan``).
+    """
     if not cfg.use_plan:
         return None
+    if cfg.shard is not None:
+        from repro.distributed import halo as _halo
+
+        return _halo.build_plan(foot, cfg.interp, cfg.weight_dtype, cfg.shard)
     return _sl.build_plan(foot, cfg.interp, cfg.weight_dtype,
                           shape=foot.shape[-3:])
 
@@ -83,6 +97,14 @@ def grad_traj(m_traj: jnp.ndarray, cfg: TransportConfig) -> jnp.ndarray:
     stencil sweeps from ``solve_inc_state`` *and again* from ``body_force``
     in every PCG Hessian matvec.
     """
+    if cfg.shard is not None:
+        if cfg.deriv == "fd8":
+            # The halo FD8 operators batch over leading axes natively — one
+            # stacked exchange for the whole trajectory instead of Nt+1.
+            return _deriv.grad(m_traj, scheme=cfg.deriv, shard=cfg.shard)
+        return jax.vmap(
+            lambda m: _deriv.grad(m, scheme=cfg.deriv, shard=cfg.shard)
+        )(m_traj)
     return jax.vmap(
         lambda m: _deriv.grad(m, scheme=cfg.deriv, backend=cfg.backend)
     )(m_traj)
@@ -110,7 +132,7 @@ def solve_state(
 
     def step(m, _):
         m_new = _sl.sl_step(m, foot, cfg.interp, cfg.weight_dtype, cfg.backend,
-                            plan=plan)
+                            plan=plan, shard=cfg.shard)
         return m_new, m_new
 
     _, traj = jax.lax.scan(step, m0, None, length=cfg.nt)
@@ -139,14 +161,15 @@ def solve_adjoint(
     if plan_adj is None:
         plan_adj = interp_plan(foot_adj, cfg)
     if divv is None:
-        divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend)
+        divv = _deriv.div(v, scheme=cfg.deriv, backend=cfg.backend,
+                          shard=cfg.shard)
     dt = _dt(cfg)
 
     def step(lam, _):
         src0 = divv * lam
         lam_new = _sl.sl_step_with_source(
             lam, src0, divv, foot_adj, dt, cfg.interp, cfg.weight_dtype,
-            cfg.backend, plan=plan_adj
+            cfg.backend, plan=plan_adj, shard=cfg.shard
         )
         return lam_new, lam_new
 
@@ -184,6 +207,10 @@ def solve_inc_state(
         # m_traj is fixed across all PCG matvecs of a Newton step; with its
         # cached gradients the source term is pointwise algebra only.
         sources = -jnp.sum(vt[None] * grad_m_traj, axis=1)
+    elif cfg.shard is not None:
+        # Sharded plan-off path: one stacked halo FD8 sweep for the whole
+        # trajectory (grad_traj dispatches to the slab operators).
+        sources = -jnp.sum(vt[None] * grad_traj(m_traj, cfg), axis=1)
     else:
         def src(m_t):
             g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend)
@@ -194,10 +221,10 @@ def solve_inc_state(
 
     def step(mt, js):
         s0, s1 = js
-        if plan is not None:
+        if plan is not None or cfg.shard is not None:
             mt_adv, s0_adv = _sl.sl_step_many(
                 jnp.stack([mt, s0]), foot, cfg.interp, cfg.weight_dtype,
-                cfg.backend, plan=plan)
+                cfg.backend, plan=plan, shard=cfg.shard)
         else:
             mt_adv = _sl.sl_step(mt, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
             s0_adv = _sl.sl_step(s0, foot, cfg.interp, cfg.weight_dtype, cfg.backend)
@@ -256,7 +283,8 @@ def body_force(
 
     def step(acc, args):
         w_t, lam_t, m_t = args
-        g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend)
+        g = _deriv.grad(m_t, scheme=cfg.deriv, backend=cfg.backend,
+                        shard=cfg.shard)
         return acc + w_t * lam_t[None] * g, None
 
     acc, _ = jax.lax.scan(step, acc0, (w, lam_traj, m_traj))

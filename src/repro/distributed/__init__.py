@@ -1,1 +1,2 @@
+from . import halo  # noqa: F401
 from . import sharding  # noqa: F401

@@ -1,7 +1,12 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
-# real single host device. Only launch/dryrun.py forces 512 devices.
+# real single host device. Only launch/dryrun.py forces 512 devices, and the
+# ``multidev``-marked tests run their bodies in subprocesses that set
+# XLA_FLAGS before the first jax initialization (see ``run_forced`` below).
+import os
 import pathlib
+import subprocess
 import sys
+import textwrap
 
 # The container may lack `hypothesis` (an optional dev dep, see
 # requirements-dev.txt). Install the deterministic shim before pytest
@@ -28,3 +33,44 @@ def rng():
 
 def assert_allclose(a, b, rtol=1e-5, atol=1e-5):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device harness. XLA only honors
+# ``--xla_force_host_platform_device_count`` before the first backend
+# initialization, and this (parent) process must keep the real 1-device view,
+# so multi-device bodies run in a fresh subprocess that sets XLA_FLAGS first.
+# The preamble asserts the forced device count actually materialized — a test
+# that silently falls back to one device would "pass" without testing
+# anything distributed.
+# ---------------------------------------------------------------------------
+
+_REPO_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+
+
+def run_forced(n_devices: int, body: str, timeout: int = 900) -> str:
+    """Run ``body`` in a subprocess forced to ``n_devices`` host devices.
+
+    Fails loudly (assertion in the child, non-zero exit surfaced with full
+    stderr/stdout) if fewer devices materialize or the body raises.
+    """
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        import jax
+        assert jax.device_count() == {n_devices}, (
+            "forced {n_devices} host devices but got "
+            f"{{jax.device_count()}} ({{jax.devices()}}); refusing to run a "
+            "multi-device test on a degraded device view")
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(_REPO_ROOT, "src"))
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, f"stderr:\n{res.stderr}\nstdout:\n{res.stdout}"
+    return res.stdout
+
+
+@pytest.fixture
+def forced_devices():
+    """Fixture handle on :func:`run_forced` for ``multidev``-marked tests."""
+    return run_forced

@@ -1,0 +1,87 @@
+"""Facade option matrix: batch x multires x use_plan x mesh.
+
+Every combination must produce a fully-populated ``Result`` (metrics, det F,
+iteration/work counters, converged flag, JSON round trip). The mesh leg runs
+on a 1-device (ensemble=1, slab=1) mesh so the whole shard_map machinery —
+ShardInfo threading, halo exchange, psum inner products, plan-in-extended-
+frame — executes in the default single-device tier; true multi-device
+equality lives in ``test_dist_registration.py`` (multidev marker).
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.launch.mesh import make_mesh
+
+GRID = (8, 8, 8)
+LEVELS = [(4, 4, 4), (8, 8, 8)]
+
+
+def _mesh():
+    return make_mesh((1, 1), ("ensemble", "slab"))
+
+
+def _problem(batched: bool):
+    if batched:
+        return api.RegistrationProblem.synthetic(seed=1, grid=GRID, batch=2)
+    return api.RegistrationProblem.synthetic(seed=0, grid=GRID)
+
+
+def _options(mode: str, use_plan: bool, mesh) -> api.SolverOptions:
+    return api.SolverOptions(
+        variant="fd8-linear", nt=2, max_newton=2, mode=mode,
+        levels=LEVELS if mode == "multires" else None,
+        use_plan=use_plan, mesh=mesh, halo=4,
+    )
+
+
+def _assert_populated(result, mode: str, batched: bool, meshed: bool):
+    assert result.mode == mode
+    assert result.grid == GRID
+    n = np.prod(GRID)
+    if batched:
+        assert result.v.shape == (2, 3) + GRID
+        assert result.m_warped.shape == (2,) + GRID
+        for field in (result.mismatch_rel, result.iters, result.matvecs,
+                      result.rel_grad, result.converged, result.detF):
+            assert len(field) == 2
+        assert all(np.isfinite(m) for m in result.mismatch_rel)
+        assert all(np.isfinite(d["min"]) for d in result.detF)
+        assert all(m >= 1 for m in result.matvecs)
+        assert result.batch == 2
+    else:
+        assert result.v.shape == (3,) + GRID
+        assert result.m_warped.shape == GRID
+        assert np.isfinite(result.mismatch_rel)
+        assert set(result.detF) == {"min", "mean", "max"}
+        assert result.iters >= 1 and result.matvecs >= 1
+        assert np.isfinite(result.rel_grad)
+        assert isinstance(result.converged, (bool, np.bool_))
+    if mode == "multires":
+        assert [tuple(s) for s in result.levels] == LEVELS
+        assert result.fine_iters is not None
+        assert len(result.level_results) == len(LEVELS)
+    assert result.wall_time_s > 0
+    if meshed:
+        assert result.mesh == {"ensemble": 1, "slab": 1}
+    else:
+        assert result.mesh is None
+    # the record schema used by benchmarks/ must serialize
+    json.dumps(result.to_dict())
+
+
+@pytest.mark.parametrize("use_plan", [True, False])
+@pytest.mark.parametrize("meshed", [False, True])
+@pytest.mark.parametrize("mode,batched", [
+    ("single", False),
+    ("multires", False),
+    ("batch", True),
+])
+def test_option_matrix(mode, batched, use_plan, meshed):
+    mesh = _mesh() if meshed else None
+    result = api.Solver(_options(mode, use_plan, mesh)).solve(_problem(batched))
+    _assert_populated(result, mode, batched, meshed)

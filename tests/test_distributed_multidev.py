@@ -1,32 +1,28 @@
 """Multi-device behaviour, run in subprocesses with forced host devices
-(the parent test process must keep the default 1-device view)."""
+(the parent test process must keep the default 1-device view).
+
+The subprocess harness lives in ``conftest.run_forced`` (via the
+``forced_devices`` fixture): it sets XLA_FLAGS before the first jax
+initialization and *asserts* the forced device count materialized, so these
+tests fail loudly instead of silently running on one device. End-to-end
+sharded *registration* equality tests live in ``test_dist_registration.py``.
+"""
 
 import os
 import subprocess
 import sys
-import textwrap
 
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-
-def run_forced(n_devices: int, body: str, timeout=600):
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
-    """) + textwrap.dedent(body)
-    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
-    res = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=timeout)
-    assert res.returncode == 0, f"stderr:\n{res.stderr}\nstdout:\n{res.stdout}"
-    return res.stdout
+pytestmark = pytest.mark.multidev
 
 
-def test_halo_sl_step_matches_single_device():
+def test_halo_sl_step_matches_single_device(forced_devices):
     """Slab-sharded semi-Lagrangian with explicit ring halo exchange equals
     the single-device SL step."""
-    run_forced(4, """
+    forced_devices(4, """
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_mesh
         from repro.distributed.claire_dist import halo_sl_step
@@ -43,15 +39,16 @@ def test_halo_sl_step_matches_single_device():
         # 0.4.x Mesh context manager covers the ambient-mesh uses.
         with mesh:
             sharded = jax.jit(halo_sl_step(mesh, halo=8))(pair.m0, foot)
+        # the halo prefilter is exact -> only fp32 op-ordering noise remains
         np.testing.assert_allclose(np.asarray(sharded), np.asarray(ref),
-                                   rtol=5e-4, atol=5e-4)
+                                   rtol=2e-5, atol=2e-5)
         print("halo OK")
     """)
 
 
-def test_compressed_psum_matches_mean():
+def test_compressed_psum_matches_mean(forced_devices):
     """int8 cross-pod gradient exchange approximates the exact mean."""
-    run_forced(4, """
+    forced_devices(4, """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
@@ -74,9 +71,9 @@ def test_compressed_psum_matches_mean():
     """)
 
 
-def test_sharded_train_step_runs_on_4_devices():
+def test_sharded_train_step_runs_on_4_devices(forced_devices):
     """Smoke config train step on a (2, 2) mesh: sharded end to end."""
-    run_forced(4, """
+    forced_devices(4, """
         import jax, jax.numpy as jnp
         from repro.configs import ARCHS
         from repro.configs.base import ShapeConfig
@@ -113,10 +110,10 @@ def test_dryrun_cell_end_to_end():
     assert "bound=" in res.stdout
 
 
-def test_ensemble_registration_sharded():
+def test_ensemble_registration_sharded(forced_devices):
     """Ensemble (population-study) DP: batch of pairs sharded over devices;
     results match the unsharded vmap."""
-    run_forced(4, """
+    forced_devices(4, """
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_mesh
         from repro.distributed.claire_dist import (
