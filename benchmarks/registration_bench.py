@@ -455,9 +455,163 @@ def run_dist(
     return entry
 
 
+# ---------------------------------------------------------------------------
+# Serving SLO benchmark: the registration server under mixed traffic.
+#
+# Drives `repro.serve.Server` with a mixed-grid longitudinal request stream
+# under two arrival patterns — closed-loop burst (everything at t=0: peak
+# dynamic-batching utilization, throughput-bound) and open-loop Poisson
+# (latency includes batching wait; utilization < 1 under trickle traffic) —
+# and records p50/p99 latency, pairs/sec, wave utilization, and warm-vs-cold
+# Newton iteration counts into results/BENCH_serve.json. The warm-start
+# claim: repeat-subject (longitudinal) requests, started from the cached
+# prior velocity with the cold gradient norm as stopping reference, converge
+# in fewer Newton iterations than their cold first visits.
+# ---------------------------------------------------------------------------
+
+
+def _phase_stats(results, wall_s):
+    from repro.serve import percentile
+
+    lat = [r.latency_s for r in results]
+    warm = [r.iters for r in results if r.warm_started]
+    cold = [r.iters for r in results if not r.warm_started]
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else None
+    return dict(
+        n=len(results),
+        converged=sum(1 for r in results if r.converged),
+        warm=len(warm),
+        cold=len(cold),
+        latency_p50_s=percentile(lat, 50),
+        latency_p99_s=percentile(lat, 99),
+        latency_mean_s=mean(lat),
+        queue_mean_s=mean([r.queue_s for r in results]),
+        pairs_per_sec=len(results) / max(wall_s, 1e-9),
+        iters_mean_warm=mean(warm),
+        iters_mean_cold=mean(cold),
+        wall_s=wall_s,
+    )
+
+
+def run_serve(
+    smoke: bool = False,
+    grids=(16, 24),
+    subjects: int = 4,
+    max_batch: int = 2,
+    max_wait_s: float = 0.25,
+    max_newton: int = 4,
+    tol: float = 0.25,
+    rate: float = 0.5,
+    open_loop_requests: int = None,
+    variant: str = "fd8-cubic",
+    seed: int = 7,
+    out: str = "BENCH_serve.json",
+):
+    """Three phases against one server (one warm-start cache):
+
+      1. closed-loop cold burst  — every subject's first visit at t=0;
+      2. closed-loop warm burst  — every subject's second visit (all warm);
+      3. open-loop Poisson       — revisit stream at ``rate`` req/s (skipped
+                                   with --smoke unless it is short).
+    """
+    import tempfile
+
+    from repro.launch.serve_registration import (poisson_delays, serve_stream,
+                                                 synthetic_study)
+    from repro.serve import ServeConfig, Server
+
+    grid_shapes = [(g, g, g) for g in grids]
+    n_open = open_loop_requests if open_loop_requests is not None else \
+        (subjects if smoke else 3 * subjects)
+    # Two visits per subject up front (cold burst + warm burst), then the
+    # open-loop phase keeps revisiting (third+ visits, all warm).
+    requests = synthetic_study(grid_shapes, 2 * subjects + n_open, subjects,
+                               seed=seed, variant=variant)
+    cold_burst = requests[:subjects]
+    warm_burst = requests[subjects:2 * subjects]
+    open_reqs = requests[2 * subjects:]
+
+    cache_dir = tempfile.mkdtemp(prefix="serve_bench_cache_")
+    # ``tol`` is sized so the cold bursts *converge* below max_newton at
+    # smoke grids — a capped cold solve would make warm-vs-cold vacuous.
+    cfg = ServeConfig(max_batch=max_batch, max_wait_s=max_wait_s,
+                      max_newton=max_newton, tol_rel_grad=tol,
+                      cache_dir=cache_dir)
+
+    phases = {}
+    with Server(cfg) as server:
+        t0 = time.perf_counter()
+        res_cold = serve_stream(server, cold_burst)
+        phases["burst_cold"] = _phase_stats(res_cold,
+                                            time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        res_warm = serve_stream(server, warm_burst)
+        phases["burst_warm"] = _phase_stats(res_warm,
+                                            time.perf_counter() - t0)
+        if open_reqs:
+            delays = poisson_delays(len(open_reqs), rate, seed=seed)
+            t0 = time.perf_counter()
+            res_open = serve_stream(server, open_reqs, delays)
+            phases["open_loop_poisson"] = _phase_stats(
+                res_open, time.perf_counter() - t0)
+            phases["open_loop_poisson"]["rate_req_s"] = rate
+        summary = server.summary()
+
+    all_results = res_cold + res_warm + (res_open if open_reqs else [])
+    rows = []
+    for name, p in phases.items():
+        rows.append([
+            name, p["n"], fmt(p["latency_p50_s"], 2), fmt(p["latency_p99_s"], 2),
+            fmt(p["pairs_per_sec"], 2),
+            fmt(p["iters_mean_cold"], 1) if p["iters_mean_cold"] is not None else "-",
+            fmt(p["iters_mean_warm"], 1) if p["iters_mean_warm"] is not None else "-",
+        ])
+    print_table(
+        f"Registration serving SLOs (grids {list(grids)}, {subjects} subjects, "
+        f"max_batch={max_batch}, variant {variant}): dynamic batching + "
+        "warm-start cache",
+        ["phase", "n", "p50 s", "p99 s", "pairs/s", "cold iters", "warm iters"],
+        rows)
+    print(f"[bench] waves: {summary['waves']}, mean utilization "
+          f"{summary['utilization_mean']:.2f}, warm hits {summary['warm_hits']}")
+
+    entry = dict(
+        ts=time.time(),
+        smoke=smoke,
+        host_devices=jax.device_count(),
+        grids=[list(g) for g in grid_shapes],
+        subjects=subjects,
+        max_batch=max_batch,
+        max_wait_s=max_wait_s,
+        max_newton=max_newton,
+        tol_rel_grad=tol,
+        variant=variant,
+        phases=phases,
+        server=summary,
+        per_request=[dict(r.to_dict(), v=None) for r in all_results],
+    )
+    _append_json(RESULTS_DIR / out, entry)
+    print(f"[bench] appended entry to {RESULTS_DIR / out}")
+
+    # acceptance: every request completed; the stream mixed grids; warm
+    # repeat-subject solves took fewer Newton iterations than cold starts.
+    n_expected = 2 * subjects + len(open_reqs)
+    assert summary["completed"] == n_expected, (
+        f"{summary['completed']}/{n_expected} requests completed")
+    assert len({r.grid for r in all_results}) >= min(len(grid_shapes), 2), (
+        "request stream did not mix grids")
+    cold_iters = phases["burst_cold"]["iters_mean_cold"]
+    warm_iters = phases["burst_warm"]["iters_mean_warm"]
+    assert warm_iters is not None and cold_iters is not None
+    assert warm_iters < cold_iters, (
+        f"warm-start mean iters {warm_iters} !< cold {cold_iters}")
+    return entry
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=["variants", "api-smoke", "matvec", "dist"],
+    ap.add_argument("--mode", choices=["variants", "api-smoke", "matvec",
+                                       "dist", "serve"],
                     default="variants")
     ap.add_argument("--grid", type=int, default=None)
     ap.add_argument("--max-newton", type=int, default=None)
@@ -471,7 +625,38 @@ def main(argv=None):
                     help="dist mode: forced host device count / slab shards")
     ap.add_argument("--halo", type=int, default=6,
                     help="dist mode: SL interpolation halo width (voxels)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve mode: CI-sized stream (small grids, short "
+                         "open-loop phase)")
+    ap.add_argument("--grids", default=None,
+                    help="serve mode: comma list of cubic grid sizes")
+    ap.add_argument("--subjects", type=int, default=None,
+                    help="serve mode: distinct longitudinal subjects")
+    ap.add_argument("--max-batch", type=int, default=2,
+                    help="serve mode: dynamic-batching wave width")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="serve mode: open-loop Poisson arrival rate (req/s)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="serve mode: relative-gradient stopping tolerance")
     args = ap.parse_args(argv)
+    if args.mode == "serve":
+        if args.smoke:
+            grids = tuple(int(g) for g in (args.grids or "12,16").split(","))
+            run_serve(smoke=True, grids=grids,
+                      subjects=args.subjects or 2,
+                      max_batch=args.max_batch,
+                      max_newton=args.max_newton or 4,
+                      tol=args.tol if args.tol is not None else 0.25,
+                      rate=args.rate if args.rate is not None else 1.0)
+        else:
+            grids = tuple(int(g) for g in (args.grids or "16,24").split(","))
+            run_serve(smoke=False, grids=grids,
+                      subjects=args.subjects or 4,
+                      max_batch=args.max_batch,
+                      max_newton=args.max_newton or 8,
+                      tol=args.tol if args.tol is not None else 0.15,
+                      rate=args.rate if args.rate is not None else 0.5)
+        return
     if args.mode == "variants":
         run(args.grid or 32,
             **({"max_newton": args.max_newton} if args.max_newton else {}))

@@ -38,6 +38,13 @@ class SolverOptions:
     tol_rel_grad: float = 5e-2
     max_newton: int = 50
     continuation: bool = False
+    # warm start: initial velocity (3, N1, N2, N3) — or (B, 3, ...) for
+    # batched problems — threaded down to the core drivers; multires solves
+    # restrict it onto the coarsest level. ``gnorm_ref`` fixes the
+    # relative-gradient stopping reference for warm starts (per-pair array
+    # for batched problems); default measures against the warm gradient.
+    v0: object = None
+    gnorm_ref: object = None
     # solve strategy
     mode: str = "auto"
     # slab-distributed solving (repro.distributed): a jax.sharding.Mesh
@@ -90,8 +97,15 @@ class SolverOptions:
 
     def to_dict(self) -> Dict:
         # asdict() deep-copies field values, and jax Mesh/Device objects are
-        # not copyable — serialize the mesh separately as axis -> size.
-        d = asdict(replace(self, mesh=None))
+        # not copyable — serialize the mesh separately as axis -> size and
+        # the warm-start arrays as shapes.
+        d = asdict(replace(self, mesh=None, v0=None, gnorm_ref=None))
+        if self.v0 is not None:
+            d["v0"] = list(getattr(self.v0, "shape", ()))
+        if self.gnorm_ref is not None:
+            d["gnorm_ref"] = (list(getattr(self.gnorm_ref, "shape", ()))
+                              if hasattr(self.gnorm_ref, "shape")
+                              else float(self.gnorm_ref))
         if d["levels"] is not None:
             d["levels"] = [list(s) for s in d["levels"]]
         if d["level_newton"] is not None:

@@ -43,9 +43,10 @@ def solve(
     eta: float = 0.5,
     max_iters: int = 100,
     tol_rel_grad: float = 5e-2,
+    v0: jnp.ndarray | None = None,
     verbose: bool = False,
 ) -> GDResult:
-    v = jnp.zeros((3,) + m0.shape, dtype=m0.dtype)
+    v = v0 if v0 is not None else jnp.zeros((3,) + m0.shape, dtype=m0.dtype)
     precond = _pcg.make_reg_preconditioner(beta, gamma)
 
     @jax.jit

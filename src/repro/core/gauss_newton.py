@@ -301,6 +301,7 @@ def solve_batch(
     cfg: _tr.TransportConfig,
     gn: GNConfig = GNConfig(),
     v0: jnp.ndarray | None = None,
+    gnorm_ref: Any | None = None,
     verbose: bool = False,
     step_fn=None,
 ) -> BatchGNResult:
@@ -311,6 +312,15 @@ def solve_batch(
     with *per-pair* state; converged pairs are frozen with masked updates
     while the rest keep iterating, so the returned per-pair results match the
     unbatched solver.
+
+    ``v0`` optionally warm-starts the iteration, ``(B, 3, N1, N2, N3)``.
+    ``gnorm_ref`` is the per-pair counterpart of :func:`solve`'s argument: a
+    ``(B,)`` array fixing the reference of the relative-gradient stopping
+    test. Warm-started pairs (longitudinal re-registrations of the same
+    subject) need this — their incoming gradient is already small, and
+    measuring convergence relative to *it* would demand far more accuracy
+    than the cold solve delivered. Entries that are non-finite or ``<= 0``
+    fall back to the observed initial gradient norm of that pair.
     """
     if gn.continuation:
         raise ValueError("solve_batch does not support beta-continuation")
@@ -340,6 +350,11 @@ def solve_batch(
         gnorm = np.asarray(stats.gnorm, dtype=np.float64)
         if gnorm0 is None:
             gnorm0 = gnorm.copy()
+            if gnorm_ref is not None:
+                ref = np.broadcast_to(
+                    np.asarray(gnorm_ref, dtype=np.float64), (bsz,)).copy()
+                use_ref = np.isfinite(ref) & (ref > 0)
+                gnorm0 = np.where(use_ref, ref, gnorm0)
         rel = np.where(gnorm0 > 0, gnorm / gnorm0, 0.0)
         gnorm_last = np.where(active, gnorm, gnorm_last)
         pcg = np.asarray(stats.pcg_iters, dtype=np.int64)

@@ -176,12 +176,24 @@ def solve_multires(
     level_cfgs: Optional[Sequence[_tr.TransportConfig]] = None,
     level_weight_dtypes: Optional[Sequence] = None,
     presmooth_sigma: float = 0.0,
+    v0: Optional[jnp.ndarray] = None,
+    gnorm_ref: Optional[float] = None,
     verbose: bool = False,
     solve_fn=None,
 ) -> MultiresResult:
     """Coarse-to-fine Gauss-Newton: solve each pyramid level, prolong, refine.
 
     levels        : grid shapes, coarsest first; default halving pyramid.
+    v0            : optional initial velocity at the *finest* grid; it is
+                    spectrally restricted to warm-start the coarsest level
+                    (longitudinal re-registration: start the whole pyramid
+                    from a prior visit's solution instead of zero).
+    gnorm_ref     : optional external reference for the relative-gradient
+                    stopping test (see ``gauss_newton.solve``); default is
+                    the coarsest level's observed initial gradient norm.
+                    Warm starts via ``v0`` should pass the cold-start
+                    reference here, else the already-small warm gradient
+                    becomes the yardstick.
     coarse_tol    : relative-gradient tolerance on non-final levels; default
                     ``gn.tol_rel_grad`` — coarse iterations are cheap, and a
                     tightly solved coarse level is what lets the fine level
@@ -225,7 +237,6 @@ def solve_multires(
     m1_s = _spec.gauss_smooth(m1, presmooth_sigma) if presmooth_sigma > 0 else m1
 
     v = None
-    gnorm_ref: float | None = None
     level_results: List[LevelResult] = []
     history: List[Dict[str, float]] = []
     total_iters = 0
@@ -246,16 +257,23 @@ def solve_multires(
             max_newton=int(level_newton[li]) if level_newton is not None else gn.max_newton,
             continuation=gn.continuation and li == 0,
         )
-        v0 = prolong(v, lev) if v is not None else None
+        if v is not None:
+            v0_l = prolong(v, lev)
+        elif v0 is not None:
+            # Caller-provided start (finest-grid field): restrict onto the
+            # coarsest level instead of silently dropping it.
+            v0_l = fourier_resample(v0, lev)
+        else:
+            v0_l = None
         # First-step PCG forcing at warm levels: the coarse level's final
         # relative gradient is the best available Eisenstat-Walker estimate.
         eta0 = None
         if level_results:
             eta0 = min(gn.forcing_max, level_results[-1].rel_grad ** 0.5)
         if verbose:
-            print(f"[multires] level {li}: {lev} (warm={'yes' if v0 is not None else 'no'})")
+            print(f"[multires] level {li}: {lev} (warm={'yes' if v0_l is not None else 'no'})")
         _solve = solve_fn if solve_fn is not None else _gn.solve
-        res = _solve(m0_l, m1_l, cfg_l, gn_l, v0=v0, gnorm_ref=gnorm_ref,
+        res = _solve(m0_l, m1_l, cfg_l, gn_l, v0=v0_l, gnorm_ref=gnorm_ref,
                      eta0=eta0, verbose=verbose)
         if gnorm_ref is None and res.gnorm0 > 0:
             gnorm_ref = res.gnorm0

@@ -117,11 +117,16 @@ def register(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    v0: Optional[jnp.ndarray] = None,
+    gnorm_ref: Optional[float] = None,
     verbose: bool = False,
 ) -> RegistrationResult:
     """Register template ``m0`` to reference ``m1`` (paper eq. (1)).
 
     Returns the stationary velocity ``v`` and the paper's quality metrics.
+    ``v0`` warm-starts the Gauss-Newton iteration (e.g. from a prior solve
+    of the same subject); ``gnorm_ref`` fixes the stopping-test reference
+    for such warm starts (see ``gauss_newton.solve``).
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
@@ -133,7 +138,8 @@ def register(
         max_newton=max_newton,
         continuation=continuation,
     )
-    res = _gn.solve(m0, m1, cfg, gn_cfg, verbose=verbose)
+    res = _gn.solve(m0, m1, cfg, gn_cfg, v0=v0, gnorm_ref=gnorm_ref,
+                    verbose=verbose)
     m_warped, mis, detf = _score_single(m0, m1, res.v, cfg)
     return RegistrationResult(
         v=res.v,
@@ -185,6 +191,8 @@ def register_multires(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    v0: Optional[jnp.ndarray] = None,
+    gnorm_ref: Optional[float] = None,
     verbose: bool = False,
 ) -> MultiresRegistrationResult:
     """Coarse-to-fine registration (CLAIRE grid continuation).
@@ -220,6 +228,8 @@ def register_multires(
         level_newton=level_newton,
         level_cfgs=level_cfgs,
         presmooth_sigma=presmooth_sigma,
+        v0=v0,
+        gnorm_ref=gnorm_ref,
         verbose=verbose,
     )
     m_warped, mis, detf = _score_single(m0, m1, res.v, cfg)
@@ -265,6 +275,8 @@ def register_batch(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    v0: Optional[jnp.ndarray] = None,
+    gnorm_ref=None,
     verbose: bool = False,
 ) -> BatchRegistrationResult:
     """Register a batch of pairs ``m0[b] -> m1[b]`` with one vmapped solver.
@@ -284,7 +296,8 @@ def register_batch(
         tol_rel_grad=tol_rel_grad,
         max_newton=max_newton,
     )
-    res = _gn.solve_batch(m0, m1, cfg, gn_cfg, verbose=verbose)
+    res = _gn.solve_batch(m0, m1, cfg, gn_cfg, v0=v0, gnorm_ref=gnorm_ref,
+                          verbose=verbose)
     # Post-solve scoring stays batched too: one dispatch for all pairs.
     m_warped, mis, detf = _score_batch(m0, m1, res.v, cfg)
     return BatchRegistrationResult(
@@ -331,6 +344,8 @@ def register_sharded(
     presmooth_sigma: float = 0.0,
     mixed_precision: bool = False,
     use_plan: bool = True,
+    v0: Optional[jnp.ndarray] = None,
+    gnorm_ref=None,
     verbose: bool = False,
 ):
     """Register with the grid sharded in x1 slabs over ``mesh``.
@@ -379,7 +394,8 @@ def register_sharded(
             raise ValueError("batched sharded registration has no multires mode")
         res = _dist.solve_ensemble_slab(
             m0, m1, cfg, gn_cfg, mesh=mesh, ens_axis=ensemble_axis,
-            slab_axis=slab_axis, halo=halo, verbose=verbose)
+            slab_axis=slab_axis, halo=halo, v0=v0, gnorm_ref=gnorm_ref,
+            verbose=verbose)
         v = _unshard(res.v, mesh)
         m_warped, mis, detf = _score_batch(m0, m1, v, cfg)
         return BatchRegistrationResult(
@@ -419,6 +435,8 @@ def register_sharded(
             level_newton=level_newton,
             level_cfgs=level_cfgs,
             presmooth_sigma=presmooth_sigma,
+            v0=v0,
+            gnorm_ref=gnorm_ref,
             verbose=verbose,
             solve_fn=solve_fn,
         )
@@ -441,7 +459,8 @@ def register_sharded(
         )
 
     res = _dist.solve_slab(m0, m1, cfg, gn_cfg, mesh=mesh,
-                           slab_axis=slab_axis, halo=halo, verbose=verbose)
+                           slab_axis=slab_axis, halo=halo, v0=v0,
+                           gnorm_ref=gnorm_ref, verbose=verbose)
     v = _unshard(res.v, mesh)
     m_warped, mis, detf = _score_single(m0, m1, v, cfg)
     return RegistrationResult(

@@ -300,11 +300,19 @@ def solve_ensemble_slab(
     slab_axis: Optional[str] = None,
     halo: int = 6,
     v0: jnp.ndarray | None = None,
+    gnorm_ref=None,
     verbose: bool = False,
+    step_fn=None,
 ) -> _gn.BatchGNResult:
     """Batch of registrations on a 2D (ensemble, slab) mesh: pairs sharded
     over the ensemble axis (zero collectives), each pair's grid x1-sharded
-    over the slab axis. Outer driver: ``gauss_newton.solve_batch``."""
+    over the slab axis. Outer driver: ``gauss_newton.solve_batch``.
+
+    ``step_fn`` injects a pre-built sharded Newton step (from
+    :func:`make_slab_step` with the same mesh/axes/halo) so long-lived
+    callers — the registration server solving many waves of the same shape —
+    compile once instead of re-wrapping ``shard_map`` per call.
+    """
     _check_slab_cfg(cfg)
     slab_axis = slab_axis or slab_axis_name(mesh)
     ens_axis = ens_axis or ensemble_axis_name(mesh)
@@ -318,12 +326,13 @@ def solve_ensemble_slab(
         raise ValueError(
             f"batch {m0.shape[0]} not divisible by ensemble axis "
             f"{ens_axis!r} of size {ne}")
-    step = make_slab_step(mesh, cfg, gn, slab_axis, halo, ens_axis=ens_axis)
+    step = step_fn if step_fn is not None else make_slab_step(
+        mesh, cfg, gn, slab_axis, halo, ens_axis=ens_axis)
     img_sh, vel_sh = slab_solve_shardings(mesh, slab_axis, ens_axis)
     m0 = jax.device_put(jnp.asarray(m0), img_sh)
     m1 = jax.device_put(jnp.asarray(m1), img_sh)
     if v0 is None:
         v0 = jnp.zeros((m0.shape[0], 3) + m0.shape[1:], dtype=m0.dtype)
     v0 = jax.device_put(jnp.asarray(v0), vel_sh)
-    return _gn.solve_batch(m0, m1, cfg, gn, v0=v0, verbose=verbose,
-                           step_fn=step)
+    return _gn.solve_batch(m0, m1, cfg, gn, v0=v0, gnorm_ref=gnorm_ref,
+                           verbose=verbose, step_fn=step)

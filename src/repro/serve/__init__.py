@@ -1,0 +1,34 @@
+"""Registration-as-a-service: the serving front end of the solver stack.
+
+    from repro import serve
+
+    with serve.Server(serve.ServeConfig(max_batch=4,
+                                        cache_dir="cache/")) as server:
+        fut = server.submit(serve.Request(m0, m1, subject="patient-7"))
+        print(fut.result().mismatch_rel)
+
+Requests are bucketed by (grid shape, solver variant), dynamically batched
+into padded vmapped — or slab-sharded — Newton-solve waves, and warm-started
+from a per-subject velocity cache persisted through ``repro.checkpoint``.
+See ``repro.serve.server`` for the pipeline, ``repro.launch.
+serve_registration`` for the asyncio front end, and ``benchmarks/
+registration_bench.py --mode serve`` for the SLO benchmarks.
+"""
+
+from .batching import BucketKey, RequestQueue
+from .cache import WarmStartCache
+from .metrics import ServeStats, percentile
+from .request import Request, RequestResult
+from .server import ServeConfig, Server
+
+__all__ = [
+    "BucketKey",
+    "percentile",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "ServeConfig",
+    "Server",
+    "ServeStats",
+    "WarmStartCache",
+]

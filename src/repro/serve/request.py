@@ -1,0 +1,85 @@
+"""Request / result records of the registration server.
+
+A :class:`Request` is one registration job — the fixed/moving pair plus the
+per-request options the server buckets on (grid size is implicit in the
+image shape, the solver variant is explicit). ``subject`` is the warm-start
+cache key: longitudinal requests tagged with the same subject start
+Gauss-Newton from the prior visit's velocity field.
+
+A :class:`RequestResult` is what the request's future resolves to: the
+velocity, the quality/work numbers of the solve, the warm-start provenance,
+and the per-request latency breakdown (queue wait, device solve, result
+materialization) that the SLO benchmarks aggregate into p50/p99.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import registration as _reg
+
+
+@dataclass(frozen=True)
+class Request:
+    """One registration job: transport ``m0`` (moving) onto ``m1`` (fixed)."""
+
+    m0: Any                        # (N1, N2, N3)
+    m1: Any                        # (N1, N2, N3)
+    subject: Optional[str] = None  # warm-start cache key (None = never cached)
+    variant: str = "fd8-cubic"     # Table-6 solver variant (a bucketing key)
+
+    def __post_init__(self):
+        if getattr(self.m0, "shape", None) != getattr(self.m1, "shape", None):
+            raise ValueError(
+                f"m0 {getattr(self.m0, 'shape', None)} and "
+                f"m1 {getattr(self.m1, 'shape', None)} shapes differ")
+        if getattr(self.m0, "ndim", 0) != 3:
+            raise ValueError(
+                f"expected one (N1, N2, N3) pair per request, got "
+                f"{getattr(self.m0, 'shape', None)}")
+        if self.variant not in _reg.VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; choose from "
+                f"{sorted(_reg.VARIANTS)}")
+
+    @property
+    def grid(self) -> Tuple[int, int, int]:
+        return tuple(int(n) for n in self.m0.shape)
+
+
+@dataclass
+class RequestResult:
+    """Resolution of one request's future."""
+
+    request_id: int
+    subject: Optional[str]
+    variant: str
+    grid: Tuple[int, int, int]
+    v: np.ndarray                  # (3, N1, N2, N3) stationary velocity
+    mismatch_rel: float            # ||m(1) - m1|| / ||m1 - m0||
+    iters: int                     # accepted Newton steps
+    matvecs: int                   # Hessian matvecs spent in PCG
+    gnorm0: float                  # gradient norm at the starting iterate
+    rel_grad: float
+    converged: bool
+    warm_started: bool             # v0 came from the warm-start cache
+    cache_visits: int = 0          # prior visits of this subject in the cache
+    # wave provenance (utilization accounting)
+    wave_id: int = -1
+    wave_real: int = 0             # real requests in the wave
+    wave_padded: int = 0           # wave width after padding
+    # latency breakdown (seconds)
+    queue_s: float = 0.0           # submit -> wave dispatch
+    solve_s: float = 0.0           # device solve (shared by the wave)
+    collect_s: float = 0.0         # result materialization
+    latency_s: float = 0.0         # submit -> future resolution
+
+    def to_dict(self) -> Dict:
+        """JSON-safe record (the velocity array is reported as its shape)."""
+        d = dict(self.__dict__)
+        d["v"] = list(np.asarray(self.v).shape)
+        d["grid"] = list(self.grid)
+        return d

@@ -1,0 +1,290 @@
+"""Registration serving tier: batching, warm-start cache, server pipeline.
+
+Three layers, cheapest first:
+
+  * pure-host units — request validation, bucketed wave formation,
+    percentile reduction (no jax compute);
+  * the warm-start cache against ``repro.checkpoint`` — velocity pytree
+    roundtrip, ``latest_step`` selection, ``keep=`` garbage collection,
+    cross-grid spectral resampling;
+  * the live three-thread :class:`repro.serve.Server` on tiny grids — a
+    mixed-grid request stream completes through dynamic batching, and a
+    repeat-subject wave provably warm-starts (fewer Newton iterations than
+    the cold visit, measured against the same cold gradient reference).
+
+The server tests share one module-scoped server so every (grid, variant)
+bucket compiles its Newton step exactly once.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.data import synthetic
+from repro.serve import (BucketKey, Request, RequestQueue, ServeConfig,
+                         Server, WarmStartCache, percentile)
+from repro.serve.batching import PendingRequest
+
+VARIANT = "fd8-linear"          # cheapest transport; bucketing is what we test
+GRID_A = (12, 12, 12)           # smallest grid where the synthetic problem is
+GRID_B = (16, 16, 16)           # well-posed (8^3 aliases the test deformation)
+
+
+def _pair(seed, grid):
+    return synthetic.make_pair(jax.random.PRNGKey(seed), grid, amplitude=0.5)
+
+
+# ---------------------------------------------------------------------------
+# pure-host units
+# ---------------------------------------------------------------------------
+
+
+def test_request_validation():
+    m = np.zeros(GRID_A, np.float32)
+    r = Request(m0=m, m1=m, subject="s")
+    assert r.grid == GRID_A
+    with pytest.raises(ValueError):
+        Request(m0=m, m1=np.zeros((8, 8, 9), np.float32))
+    with pytest.raises(ValueError):
+        Request(m0=np.zeros((2,) + GRID_A, np.float32),
+                m1=np.zeros((2,) + GRID_A, np.float32))
+    with pytest.raises(ValueError):
+        Request(m0=m, m1=m, variant="no-such-variant")
+
+
+def _pending(rid, grid, t, variant=VARIANT):
+    m = np.zeros(grid, np.float32)
+    return PendingRequest(request_id=rid,
+                          request=Request(m0=m, m1=m, variant=variant),
+                          future=None, t_submit=t)
+
+
+def test_wave_formation_buckets_by_grid_and_age():
+    q = RequestQueue()
+    # Two buckets; the 8^3 head is oldest. t_submit values lie in the past,
+    # so every batching window has already closed — next_wave returns
+    # immediately and deterministically.
+    q.put(_pending(0, GRID_A, t=0.0))
+    q.put(_pending(1, GRID_B, t=1.0))
+    q.put(_pending(2, GRID_A, t=2.0))
+    q.put(_pending(3, GRID_A, t=3.0))
+
+    w1 = q.next_wave(max_batch=2, max_wait_s=0.0)
+    assert [p.request_id for p in w1] == [0, 2]      # oldest bucket, FIFO
+    assert len({p.key for p in w1}) == 1             # never mixes buckets
+    w2 = q.next_wave(max_batch=2, max_wait_s=0.0)
+    assert [p.request_id for p in w2] == [1]         # now the 10^3 head is oldest
+    w3 = q.next_wave(max_batch=2, max_wait_s=0.0)
+    assert [p.request_id for p in w3] == [3]
+    q.close()
+    assert q.next_wave(2, 0.0) is None
+    assert q.drained
+
+
+def test_wave_respects_max_batch_and_key():
+    q = RequestQueue()
+    for i in range(5):
+        q.put(_pending(i, GRID_A, t=float(i)))
+    w = q.next_wave(max_batch=3, max_wait_s=0.0)
+    assert [p.request_id for p in w] == [0, 1, 2]
+    assert q.depth() == 2
+    assert w[0].key == BucketKey(grid=GRID_A, variant=VARIANT)
+
+
+def test_percentile_reduction():
+    assert percentile([], 50) is None
+    assert percentile([3.0], 99) == 3.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# warm-start cache over repro.checkpoint (velocity pytree persistence)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_velocity_pytree_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    v = np.random.default_rng(0).normal(size=(3,) + GRID_A).astype(np.float32)
+    tree = {"v": v, "gnorm_ref": np.float32(7.5),
+            "grid": np.asarray(GRID_A, np.int32)}
+    save_checkpoint(d, tree, step=1)
+    save_checkpoint(d, {k: (a * 2 if k == "v" else a)
+                        for k, a in tree.items()}, step=2)
+    assert latest_step(d) == 2
+    out = restore_checkpoint(d, {"v": np.zeros_like(v),
+                                 "gnorm_ref": np.float32(0),
+                                 "grid": np.zeros(3, np.int32)})
+    np.testing.assert_allclose(np.asarray(out["v"]), 2 * v)
+    assert float(out["gnorm_ref"]) == pytest.approx(7.5)
+    assert tuple(np.asarray(out["grid"])) == GRID_A
+    # an explicit earlier step is still addressable
+    old = restore_checkpoint(d, {"v": np.zeros_like(v)}, step=1)
+    np.testing.assert_allclose(np.asarray(old["v"]), v)
+
+
+def test_checkpoint_keep_garbage_collects(tmp_path):
+    d = tmp_path / "ckpt"
+    tree = {"v": np.ones((3,) + GRID_A, np.float32)}
+    for step in (1, 2, 3, 4):
+        save_checkpoint(str(d), tree, step=step, keep=2)
+    steps = sorted(p.name for p in d.iterdir() if p.name.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+    assert latest_step(str(d)) == 4
+
+
+def test_warm_cache_memory_and_disk(tmp_path):
+    d = str(tmp_path / "cache")
+    cache = WarmStartCache(d, keep=2, async_io=False)
+    v1 = np.full((3,) + GRID_A, 0.5, np.float32)
+    assert cache.lookup("subj", GRID_A) is None
+    assert cache.update("subj", v1, gnorm0=10.0, grid=GRID_A) == 1
+    ws = cache.lookup("subj", GRID_A)
+    assert ws.visits == 1 and ws.gnorm_ref == 10.0
+    np.testing.assert_allclose(ws.v0, v1)
+
+    # revisit: velocity replaced, the *cold* gnorm reference is kept
+    assert cache.update("subj", 2 * v1, gnorm0=0.01, grid=GRID_A) == 2
+    ws = cache.lookup("subj", GRID_A)
+    assert ws.visits == 2 and ws.gnorm_ref == 10.0
+    np.testing.assert_allclose(ws.v0, 2 * v1)
+
+    # a fresh cache (fresh server process) restores the latest visit from
+    # disk through repro.checkpoint
+    fresh = WarmStartCache(d, async_io=False)
+    ws = fresh.lookup("subj", GRID_A)
+    assert ws is not None and ws.visits == 2 and ws.gnorm_ref == 10.0
+    np.testing.assert_allclose(ws.v0, 2 * v1)
+
+    # cross-grid follow-up: cached velocity is spectrally resampled
+    ws_up = fresh.lookup("subj", GRID_B)
+    assert ws_up.v0.shape == (3,) + GRID_B
+    # constant fields survive the Fourier transfer exactly
+    np.testing.assert_allclose(ws_up.v0, np.full((3,) + GRID_B, 1.0), atol=1e-5)
+
+    # keep=2 GC: a third visit drops the first step directory
+    cache.update("subj", v1, gnorm0=0.02, grid=GRID_A)
+    subj_dir = next(p for p in (tmp_path / "cache").iterdir())
+    steps = sorted(p.name for p in subj_dir.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == ["step_00000002", "step_00000003"]
+
+
+def test_warm_cache_unknown_subject_and_none():
+    cache = WarmStartCache(None)
+    assert cache.lookup(None, GRID_A) is None
+    assert cache.lookup("nobody", GRID_A) is None
+    assert cache.update(None, np.zeros((3,) + GRID_A), 1.0, GRID_A) == 0
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# live server (module-scoped: each bucket's Newton step compiles once)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server(tmp_path_factory):
+    cache_dir = tmp_path_factory.mktemp("serve_cache")
+    # tol 0.3: at 12^3/nt=2 the cold solves converge in 1-2 Newton steps,
+    # leaving headroom below max_newton so "warm takes strictly fewer
+    # iterations" is a real convergence claim, not cap saturation.
+    cfg = ServeConfig(max_batch=2, max_wait_s=0.2, nt=2, max_newton=6,
+                      tol_rel_grad=0.3,
+                      cache_dir=str(cache_dir), cache_async_io=False)
+    with Server(cfg) as s:
+        yield s, cache_dir
+
+
+def test_server_mixed_grid_stream(server):
+    srv, _ = server
+    pa, pb = _pair(0, GRID_A), _pair(1, GRID_A)
+    pc = _pair(2, GRID_B)
+    futs = [srv.submit(Request(m0=p.m0, m1=p.m1, subject=s, variant=VARIANT))
+            for p, s in ((pa, "mix-a"), (pb, "mix-b"), (pc, "mix-c"))]
+    results = [f.result(timeout=900) for f in futs]
+
+    assert [r.grid for r in results] == [GRID_A, GRID_A, GRID_B]
+    for r in results:
+        assert r.v.shape == (3,) + r.grid
+        assert np.isfinite(r.mismatch_rel) and r.mismatch_rel < 1.0
+        assert r.iters >= 1 and r.matvecs >= 1
+        assert not r.warm_started
+        assert 1 <= r.wave_real <= r.wave_padded == 2
+        assert r.latency_s >= r.queue_s >= 0.0
+    # grids never share a wave
+    waves_a = {r.wave_id for r in results[:2]}
+    assert results[2].wave_id not in waves_a
+
+
+def test_server_repeat_subject_warm_starts(server):
+    srv, cache_dir = server
+    pairs = {"warm-1": _pair(3, GRID_A), "warm-2": _pair(4, GRID_A)}
+
+    def visit():
+        futs = [srv.submit(Request(m0=p.m0, m1=p.m1, subject=s,
+                                   variant=VARIANT))
+                for s, p in pairs.items()]
+        return {r.subject: r for r in (f.result(timeout=900) for f in futs)}
+
+    cold = visit()
+    warm = visit()
+    for subj in pairs:
+        c, w = cold[subj], warm[subj]
+        assert not c.warm_started and c.iters >= 1
+        assert w.warm_started and w.cache_visits == 1
+        # the warm solve is judged against the *cold* gradient reference...
+        assert w.gnorm0 == pytest.approx(c.gnorm0, rel=1e-5)
+        # ...and, starting from the prior visit's velocity on an identical
+        # follow-up, converges in strictly fewer Newton iterations.
+        assert w.iters < c.iters
+        assert w.converged
+        assert w.mismatch_rel <= c.mismatch_rel + 1e-6
+    # visits are checkpointed per subject (sync IO in this fixture)
+    assert latest_step(str(cache_dir / "warm-1")) == 2
+
+
+def test_server_summary_counts(server):
+    srv, _ = server
+    s = srv.summary()
+    assert s["submitted"] == s["completed"] == 7
+    assert s["failed"] == 0
+    assert s["warm_hits"] == 2
+    assert s["waves"] >= 4
+    assert s["latency_p50_s"] > 0 and s["latency_p99_s"] >= s["latency_p50_s"]
+    assert s["iters_mean_warm"] < s["iters_mean_cold"]
+    assert 0 < s["utilization_mean"] <= 1.0
+
+
+def test_server_rejects_submit_before_start():
+    srv = Server(ServeConfig(max_batch=1))
+    m = np.zeros(GRID_A, np.float32)
+    with pytest.raises(RuntimeError):
+        srv.submit(Request(m0=m, m1=m))
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=0)
+
+
+# ---------------------------------------------------------------------------
+# SLO benchmark (long: open-loop Poisson phase) — excluded from tier 1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serve_bench_smoke(tmp_path, monkeypatch):
+    from benchmarks import registration_bench as B
+    monkeypatch.setattr(B, "RESULTS_DIR", tmp_path)
+    entry = B.run_serve(smoke=True, grids=(12, 16), subjects=2, max_batch=2,
+                        max_newton=6, tol=0.3, rate=2.0, variant="fd8-linear")
+    assert (tmp_path / "BENCH_serve.json").exists()
+    assert entry["server"]["failed"] == 0
+    assert entry["phases"]["burst_warm"]["iters_mean_warm"] < \
+        entry["phases"]["burst_cold"]["iters_mean_cold"]
