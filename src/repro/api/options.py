@@ -11,6 +11,7 @@ from __future__ import annotations
 from dataclasses import asdict, dataclass, field, replace
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.core import measures as _meas
 from repro.core import registration as _reg
 
 MODES = ("auto", "single", "multires", "batch")
@@ -32,6 +33,11 @@ class SolverOptions:
     # bases + weights reused by every SL step and PCG matvec); False selects
     # the per-step recomputation reference path.
     use_plan: bool = True
+    # distance measure: "ssd" | "ncc" | "ngf", or a
+    # repro.core.measures.DistanceMeasure instance for non-default
+    # parameters. NCC/NGF register contrast-varying / multi-modal pairs;
+    # Result.mismatch_rel stays the L2 metric regardless of the measure.
+    measure: object = "ssd"
     # objective / Gauss-Newton
     beta: float = 5e-4
     gamma: float = 1e-4
@@ -75,6 +81,7 @@ class SolverOptions:
             )
         if self.coarse_variant is not None and self.coarse_variant not in _reg.VARIANTS:
             raise ValueError(f"unknown coarse_variant {self.coarse_variant!r}")
+        _meas.resolve(self.measure)  # raises on unknown measure specs
         if self.mesh is not None and self.backend != "jnp":
             raise ValueError(
                 "slab-distributed solving (mesh=...) requires backend='jnp'")
@@ -99,7 +106,10 @@ class SolverOptions:
         # asdict() deep-copies field values, and jax Mesh/Device objects are
         # not copyable — serialize the mesh separately as axis -> size and
         # the warm-start arrays as shapes.
-        d = asdict(replace(self, mesh=None, v0=None, gnorm_ref=None))
+        d = asdict(replace(self, mesh=None, v0=None, gnorm_ref=None,
+                           measure=None))
+        # Measure instances carry parameters; record the canonical name.
+        d["measure"] = _meas.resolve(self.measure).name
         if self.v0 is not None:
             d["v0"] = list(getattr(self.v0, "shape", ()))
         if self.gnorm_ref is not None:

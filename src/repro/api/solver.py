@@ -55,8 +55,8 @@ class Solver:
             variant=o.variant, beta=o.beta, gamma=o.gamma, nt=o.nt,
             tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
             backend=o.backend, mixed_precision=o.mixed_precision,
-            use_plan=o.use_plan, v0=o.v0, gnorm_ref=o.gnorm_ref,
-            verbose=o.verbose,
+            use_plan=o.use_plan, measure=o.measure, v0=o.v0,
+            gnorm_ref=o.gnorm_ref, verbose=o.verbose,
         )
         if mode == "batch":
             res = _reg.register_batch(problem.m0, problem.m1, **common)
@@ -83,7 +83,8 @@ class Solver:
             nt=o.nt, tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
             slab_axis=o.slab_axis, halo=o.halo,
             mixed_precision=o.mixed_precision, use_plan=o.use_plan,
-            v0=o.v0, gnorm_ref=o.gnorm_ref, verbose=o.verbose,
+            measure=o.measure, v0=o.v0, gnorm_ref=o.gnorm_ref,
+            verbose=o.verbose,
         )
         if mode == "batch":
             res = _reg.register_sharded(

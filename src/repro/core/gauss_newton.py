@@ -121,17 +121,41 @@ def _make_step(cfg: _tr.TransportConfig, gn: GNConfig):
     return jax.jit(_build_step(cfg, gn))
 
 
-def _make_batch_step(cfg: _tr.TransportConfig, gn: GNConfig):
+def _make_batch_step(cfg: _tr.TransportConfig, gn: GNConfig,
+                     donate: bool = False):
     """Jitted Newton step vmapped over a leading batch axis.
 
     ``m0, m1, v, eta`` carry a batch axis; ``beta, gamma`` are shared. The
     inner ``while_loop``s (PCG, line search) are batched by JAX with masked
     carries, so each pair runs exactly its own iteration counts and the
     per-pair stats match the unbatched step.
+
+    ``donate=True`` builds the buffer-donating variant used by the serving
+    path: the velocity wave — the dominant live buffer, ``(B, 3, N1, N2,
+    N3)`` per bucket — is donated to the step (``donate_argnums``) so XLA
+    aliases it into ``stats.v_new`` instead of double-buffering every padded
+    wave. Because donation consumes the input, the convergence mask can no
+    longer be applied on the host after the fact; the step takes two extra
+    arguments ``(gnorm_ref, active)``, evaluates the relative-gradient test
+    on device, and returns ``(stats, advance)`` with ``stats.v_new`` already
+    frozen for non-advancing pairs. ``gnorm_ref`` entries that are
+    non-finite or ``<= 0`` fall back to the observed gradient norm of this
+    step (the cold-start first iteration).
     """
-    return jax.jit(
-        jax.vmap(_build_step(cfg, gn), in_axes=(0, 0, 0, None, None, 0))
-    )
+    vstep = jax.vmap(_build_step(cfg, gn), in_axes=(0, 0, 0, None, None, 0))
+    if not donate:
+        return jax.jit(vstep)
+
+    def step(m0, m1, v, beta, gamma, eta, gnorm_ref, active):
+        stats = vstep(m0, m1, v, beta, gamma, eta)
+        use_ref = jnp.isfinite(gnorm_ref) & (gnorm_ref > 0)
+        gnorm0 = jnp.where(use_ref, gnorm_ref, stats.gnorm)
+        rel = jnp.where(gnorm0 > 0, stats.gnorm / gnorm0, 0.0)
+        advance = active & (rel > gn.tol_rel_grad)
+        mask = advance.reshape(advance.shape + (1,) * (v.ndim - 1))
+        return stats._replace(v_new=jnp.where(mask, stats.v_new, v)), advance
+
+    return jax.jit(step, donate_argnums=(2,))
 
 
 class GNResult(NamedTuple):
@@ -304,6 +328,7 @@ def solve_batch(
     gnorm_ref: Any | None = None,
     verbose: bool = False,
     step_fn=None,
+    donate: bool = False,
 ) -> BatchGNResult:
     """Solve ``B`` independent registrations with one vmapped Newton step.
 
@@ -321,6 +346,16 @@ def solve_batch(
     measuring convergence relative to *it* would demand far more accuracy
     than the cold solve delivered. Entries that are non-finite or ``<= 0``
     fall back to the observed initial gradient norm of that pair.
+
+    ``donate=True`` switches to the buffer-donating step (see
+    :func:`_make_batch_step`): the velocity buffer is aliased through the
+    compiled step instead of double-buffered, and the convergence mask is
+    applied on device — the step's (fp32) relative-gradient test then drives
+    the bookkeeping, so pair freezing and the device update can never
+    disagree. A caller-supplied ``step_fn`` must match the chosen calling
+    convention, i.e. be built with the same ``donate`` flag; a caller-
+    supplied ``v0`` buffer is consumed (donated on the first step) — pass a
+    copy if you still need it.
     """
     if gn.continuation:
         raise ValueError("solve_batch does not support beta-continuation")
@@ -329,7 +364,8 @@ def solve_batch(
     bsz = m0.shape[0]
     shape = m0.shape[1:]
     v = v0 if v0 is not None else jnp.zeros((bsz, 3) + shape, dtype=m0.dtype)
-    bstep = step_fn if step_fn is not None else _make_batch_step(cfg, gn)
+    bstep = step_fn if step_fn is not None else _make_batch_step(cfg, gn,
+                                                                 donate=donate)
 
     active = np.ones(bsz, dtype=bool)
     ever_converged = np.zeros(bsz, dtype=bool)
@@ -342,11 +378,30 @@ def solve_batch(
     t0 = time.perf_counter()
 
     for _ in range(gn.max_newton):
-        stats = bstep(
-            m0, m1, v,
-            jnp.float32(gn.beta), jnp.float32(gn.gamma),
-            jnp.asarray(eta, dtype=jnp.float32),
-        )
+        if donate:
+            # First step: pass the caller's reference (NaN where absent) and
+            # let the device fall back to the observed gnorm — the same
+            # resolution the host bookkeeping below applies to gnorm0.
+            if gnorm0 is not None:
+                ref_arg = gnorm0
+            elif gnorm_ref is not None:
+                ref_arg = np.broadcast_to(
+                    np.asarray(gnorm_ref, dtype=np.float64), (bsz,))
+            else:
+                ref_arg = np.full(bsz, np.nan)
+            stats, adv_dev = bstep(
+                m0, m1, v,
+                jnp.float32(gn.beta), jnp.float32(gn.gamma),
+                jnp.asarray(eta, dtype=jnp.float32),
+                jnp.asarray(ref_arg, dtype=jnp.float32),
+                jnp.asarray(active),
+            )
+        else:
+            stats = bstep(
+                m0, m1, v,
+                jnp.float32(gn.beta), jnp.float32(gn.gamma),
+                jnp.asarray(eta, dtype=jnp.float32),
+            )
         gnorm = np.asarray(stats.gnorm, dtype=np.float64)
         if gnorm0 is None:
             gnorm0 = gnorm.copy()
@@ -360,11 +415,18 @@ def solve_batch(
         pcg = np.asarray(stats.pcg_iters, dtype=np.int64)
         # Final-step PCG work counts, matching the unbatched accounting.
         matvecs += np.where(active, pcg, 0)
-        just_conv = active & (rel <= gn.tol_rel_grad)
+        if donate:
+            # The device already applied the freeze mask to v_new; mirror its
+            # decision so host bookkeeping and the update cannot diverge.
+            advance = np.asarray(adv_dev, dtype=bool) & active
+            just_conv = active & ~advance
+            v = stats.v_new
+        else:
+            just_conv = active & (rel <= gn.tol_rel_grad)
+            advance = active & ~just_conv
+            mask = jnp.asarray(advance).reshape((bsz,) + (1,) * (v.ndim - 1))
+            v = jnp.where(mask, stats.v_new, v)
         ever_converged |= just_conv
-        advance = active & ~just_conv
-        mask = jnp.asarray(advance).reshape((bsz,) + (1,) * (v.ndim - 1))
-        v = jnp.where(mask, stats.v_new, v)
         iters += advance
         eta = np.where(
             advance,

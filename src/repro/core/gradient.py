@@ -12,6 +12,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from . import derivatives as _deriv
+from . import measures as _meas
 from . import spectral as _spec
 from . import transport as _tr
 
@@ -38,6 +39,7 @@ class GradientState(NamedTuple):
     plan_fwd: object = None       # InterpPlan for forward solves
     plan_adj: object = None       # InterpPlan for backward solves
     grad_m_traj: object = None    # (Nt+1, 3, N1,N2,N3) cached grad(m_traj)
+    measure_cache: object = None  # per-measure terminal cache (measures.py)
 
 
 def evaluate(
@@ -55,7 +57,11 @@ def evaluate(
     plan_adj = _tr.interp_plan(foot_adj, cfg)
 
     m_traj = _tr.solve_state(m0, v, cfg, foot=foot_fwd, plan=plan_fwd)
-    lam1 = m1 - m_traj[-1]
+    meas = _meas.resolve(cfg.measure)
+    m_final = m_traj[-1]
+    # Terminal condition lambda(1) = -dD/dm(1) of the configured measure
+    # (m1 - m(1) for SSD — the historical behavior, bit-for-bit).
+    lam1 = meas.terminal_adjoint(m_final, m1, cfg)
     lam_traj = _tr.solve_adjoint(lam1, v, cfg, foot_adj=foot_adj, divv=divv,
                                  plan_adj=plan_adj)
 
@@ -63,9 +69,7 @@ def evaluate(
     body = _tr.body_force(lam_traj, m_traj, cfg, grad_m_traj=grad_m_traj)
     g = _spec.apply_regop(v, beta, gamma, shard=cfg.shard) + body
 
-    from . import grid as _grid
-
-    j_mis = 0.5 * _grid.inner(lam1, lam1, shard=cfg.shard)
+    j_mis = meas.value(m_final, m1, cfg)
     j_reg = _spec.reg_energy(v, beta, gamma, shard=cfg.shard)
     return GradientState(
         g=g,
@@ -79,4 +83,5 @@ def evaluate(
         plan_fwd=plan_fwd,
         plan_adj=plan_adj,
         grad_m_traj=grad_m_traj,
+        measure_cache=meas.make_cache(m_final, m1, cfg),
     )

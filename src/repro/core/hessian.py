@@ -4,15 +4,22 @@
 
 where (per Algorithm 2.1)
     inc. state  :  d mt/dt + v.grad mt + vt.grad m = 0,  mt(0) = 0
-    inc. adjoint: -d lt/dt - div(lt v) = 0,              lt(1) = -mt(1).
+    inc. adjoint: -d lt/dt - div(lt v) = 0,  lt(1) = -H_D mt(1),
+
+with H_D the Gauss-Newton (PSD) approximation of the distance measure's
+second variation — ``lt(1) = -mt(1)`` for SSD; NCC/NGF supply their own
+terminal through ``measures.gn_terminal``, consuming the per-Newton-step
+cache stored in ``GradientState.measure_cache``.
 
 The matvec reuses everything precomputed during the gradient evaluation
 (``GradientState``): the state trajectory, the footpoints, div(v), the
-interpolation plans and the trajectory gradients. With plans on, each matvec
-is therefore pure gather-multiply-accumulate (plan applications), pointwise
-algebra, and the spectral regularizer — no footpoint reprocessing, no basis
-weight recomputation and no FD8 stencil sweeps; exactly the paper's Table 1
-accounting of per-matvec vs per-Newton-step work.
+interpolation plans, the trajectory gradients and the measure cache. With
+plans on, each matvec is therefore pure gather-multiply-accumulate (plan
+applications), pointwise algebra, and the spectral regularizer — no
+footpoint reprocessing, no basis weight recomputation and no transport
+re-tracing; exactly the paper's Table 1 accounting of per-matvec vs
+per-Newton-step work. (The NGF terminal adds one FD8/FFT grad+div sweep per
+matvec — pointwise-stencil work, still no transport.)
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import gradient as _grad
+from . import measures as _meas
 from . import spectral as _spec
 from . import transport as _tr
 
@@ -34,7 +42,10 @@ def matvec(
 ) -> jnp.ndarray:
     mt1 = _tr.solve_inc_state(vt, v, gs.m_traj, cfg, foot=gs.foot_fwd,
                               plan=gs.plan_fwd, grad_m_traj=gs.grad_m_traj)
-    lt_traj = _tr.solve_inc_adjoint(mt1, v, cfg, foot_adj=gs.foot_adj,
-                                    divv=gs.divv, plan_adj=gs.plan_adj)
+    meas = _meas.resolve(cfg.measure)
+    lt1 = meas.gn_terminal(mt1, gs.m_traj[-1], None, cfg,
+                           cache=gs.measure_cache)
+    lt_traj = _tr.solve_adjoint(lt1, v, cfg, foot_adj=gs.foot_adj,
+                                divv=gs.divv, plan_adj=gs.plan_adj)
     body = _tr.body_force(lt_traj, gs.m_traj, cfg, grad_m_traj=gs.grad_m_traj)
     return _spec.apply_regop(vt, beta, gamma, shard=cfg.shard) + body

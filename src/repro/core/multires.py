@@ -20,6 +20,14 @@ The stopping test at warm-started levels is measured against the *coarsest*
 level's initial gradient norm (``gnorm_ref``): the discrete L2 norms are
 grid-consistent for smooth fields, so this approximates the fine-grid
 cold-start gradient without paying an extra fine-grid gradient evaluation.
+
+The distance measure (``cfg.measure`` — SSD/NCC/NGF, see ``core.measures``)
+rides in the transport config, so every pyramid level optimizes the same
+measure without extra plumbing; NCC/NGF values are grid-consistent (global
+correlation / domain-mean density), so the coarse-level solution warm-starts
+the fine level exactly as with SSD. Per-level configs built here (including
+``coarse_variant`` overrides in ``registration.register_multires``) must
+preserve ``cfg.measure``.
 """
 
 from __future__ import annotations

@@ -1,10 +1,16 @@
-"""Objective functional (1a): squared-L2 mismatch + H1-div regularization."""
+"""Objective functional (1a): distance measure + H1-div regularization.
+
+The mismatch term dispatches on ``cfg.measure`` (SSD/NCC/NGF — see
+``core.measures``); ``mismatch`` below is the SSD special case kept for the
+reported-metric helpers and direct callers.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from . import grid as _grid
+from . import measures as _meas
 from . import spectral as _spec
 from . import transport as _tr
 
@@ -16,8 +22,14 @@ def mismatch(m_final: jnp.ndarray, m1: jnp.ndarray, shard=None) -> jnp.ndarray:
 
 
 def relative_mismatch(m_final: jnp.ndarray, m1: jnp.ndarray, m0: jnp.ndarray) -> jnp.ndarray:
-    """The paper's reported metric: ||m(.,1)-m1||_2 / ||m1 - m0||_2."""
-    return _grid.norm_l2(m_final - m1) / _grid.norm_l2(m1 - m0)
+    """The paper's reported metric: ||m(.,1)-m1||_2 / ||m1 - m0||_2.
+
+    An identical pair (``m1 == m0``) is already matched: return 0.0 instead
+    of propagating the 0/0 NaN into results and serve metrics.
+    """
+    num = _grid.norm_l2(m_final - m1)
+    den = _grid.norm_l2(m1 - m0)
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
 
 
 def objective(
@@ -38,5 +50,6 @@ def objective(
     one plan that is shared by all Nt SL steps of the evaluation.
     """
     m_traj = _tr.solve_state(m0, v, cfg, foot=foot, plan=plan)
-    return (mismatch(m_traj[-1], m1, shard=cfg.shard)
+    meas = _meas.resolve(cfg.measure)
+    return (meas.value(m_traj[-1], m1, cfg)
             + _spec.reg_energy(v, beta, gamma, shard=cfg.shard))

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gauss_newton as _gn
+from . import measures as _meas
 from . import metrics as _metrics
 from . import multires as _mr
 from . import objective as _obj
@@ -87,12 +88,16 @@ def make_transport_config(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    measure: object = "ssd",
 ) -> _tr.TransportConfig:
     """``use_plan=False`` disables the build-once/apply-many interpolation
     plans (per-step weight recomputation; the pre-plan reference path, kept
-    for benchmarking and regression tests)."""
+    for benchmarking and regression tests). ``measure`` selects the distance
+    measure (``"ssd" | "ncc" | "ngf"`` or a ``measures.DistanceMeasure``
+    instance)."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; choose from {sorted(VARIANTS)}")
+    _meas.resolve(measure)  # fail fast on unknown measure names
     sel = VARIANTS[variant]
     return _tr.TransportConfig(
         interp=sel["interp"],
@@ -101,6 +106,7 @@ def make_transport_config(
         backend=backend,
         weight_dtype=jnp.bfloat16 if mixed_precision else None,
         use_plan=use_plan,
+        measure=measure,
     )
 
 
@@ -117,6 +123,7 @@ def register(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    measure: object = "ssd",
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref: Optional[float] = None,
     verbose: bool = False,
@@ -126,11 +133,14 @@ def register(
     Returns the stationary velocity ``v`` and the paper's quality metrics.
     ``v0`` warm-starts the Gauss-Newton iteration (e.g. from a prior solve
     of the same subject); ``gnorm_ref`` fixes the stopping-test reference
-    for such warm starts (see ``gauss_newton.solve``).
+    for such warm starts (see ``gauss_newton.solve``). ``measure`` selects
+    the distance term (``"ssd" | "ncc" | "ngf"``); ``mismatch_rel`` stays
+    the paper's L2 metric regardless, so for non-SSD measures judge quality
+    by ``converged``/Dice rather than ``mismatch_rel``.
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan)
+                                use_plan=use_plan, measure=measure)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -191,6 +201,7 @@ def register_multires(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    measure: object = "ssd",
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref: Optional[float] = None,
     verbose: bool = False,
@@ -200,11 +211,12 @@ def register_multires(
     The pyramid is ``levels`` (coarsest first) or a default halving schedule;
     each level warm-starts from the spectrally prolonged coarse velocity.
     ``coarse_variant`` optionally selects a cheaper solver variant (e.g.
-    ``"fd8-linear"``) on all but the finest level.
+    ``"fd8-linear"``) on all but the finest level. ``measure`` applies on
+    every level (the restricted images feed the same distance term).
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan)
+                                use_plan=use_plan, measure=measure)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -219,7 +231,7 @@ def register_multires(
     if coarse_variant is not None:
         coarse_cfg = make_transport_config(coarse_variant, nt=nt, backend=backend,
                                            mixed_precision=mixed_precision,
-                                           use_plan=use_plan)
+                                           use_plan=use_plan, measure=measure)
         level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
     res = _mr.solve_multires(
         m0, m1, cfg, gn_cfg,
@@ -275,6 +287,7 @@ def register_batch(
     backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
+    measure: object = "ssd",
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref=None,
     verbose: bool = False,
@@ -289,7 +302,7 @@ def register_batch(
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan)
+                                use_plan=use_plan, measure=measure)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -344,6 +357,7 @@ def register_sharded(
     presmooth_sigma: float = 0.0,
     mixed_precision: bool = False,
     use_plan: bool = True,
+    measure: object = "ssd",
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref=None,
     verbose: bool = False,
@@ -380,7 +394,7 @@ def register_sharded(
 
     cfg = make_transport_config(variant, nt=nt, backend="jnp",
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan)
+                                use_plan=use_plan, measure=measure)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -419,7 +433,8 @@ def register_sharded(
         if coarse_variant is not None:
             coarse_cfg = make_transport_config(
                 coarse_variant, nt=nt, backend="jnp",
-                mixed_precision=mixed_precision, use_plan=use_plan)
+                mixed_precision=mixed_precision, use_plan=use_plan,
+                measure=measure)
             level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
 
         def solve_fn(m0_l, m1_l, cfg_l, gn_l, **kw):

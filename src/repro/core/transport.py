@@ -45,6 +45,13 @@ class TransportConfig(NamedTuple):
                    ``shard_map``: FD8 and SL interpolation communicate via
                    explicit halo exchanges, spectral operators via all-gather
                    (see ``repro.distributed``). Requires ``backend="jnp"``.
+    measure      : distance-measure spec — a name (``"ssd" | "ncc" | "ngf"``)
+                   or a ``repro.core.measures.DistanceMeasure`` instance
+                   (for non-default parameters). ``objective``, the adjoint
+                   terminal condition in ``gradient.evaluate`` and the GN
+                   terminal condition in ``hessian.matvec`` all dispatch on
+                   it via ``measures.resolve``; ``"ssd"`` reproduces the
+                   historical hard-coded behavior bit-for-bit.
     """
 
     interp: str = "cubic_bspline"
@@ -54,6 +61,7 @@ class TransportConfig(NamedTuple):
     weight_dtype: object = None
     use_plan: bool = True
     shard: object = None
+    measure: object = "ssd"
 
 
 def _dt(cfg: TransportConfig) -> float:

@@ -90,6 +90,44 @@ def make_pair(
     return ImagePair(m0=m0, m1=m1, labels0=labels0, labels1=labels1, v_true=v_true)
 
 
+def make_multimodal_pair(
+    key,
+    shape: Tuple[int, int, int],
+    amplitude: float = 0.6,
+    nt: int = 4,
+    mode: str = "inverted",
+    dtype=jnp.float32,
+) -> ImagePair:
+    """A contrast-changed registration problem (the multi-modal scenario).
+
+    Same geometry as :func:`make_pair` — ``m1`` is the warped template — but
+    the reference's *intensity mapping* differs from the template's, the way
+    a second acquisition protocol would render the same anatomy:
+
+      * ``"inverted"``  : m1 = 1 - warped (bright tissue turns dark and vice
+        versa — anti-correlated intensities, the canonical SSD failure).
+      * ``"quadratic"``  : m1 = (1 - warped)^2, a nonlinear remap on top of
+        the inversion (also defeats measures assuming a *linear* intensity
+        relation when the contrast range is stretched).
+
+    The label maps are geometric (thresholds of the pre-remap images), so
+    Dice remains a modality-independent quality metric; ``v_true`` remains
+    the generating velocity. SSD cannot register these pairs; NCC (affine
+    intensity invariance) handles ``"inverted"``, NGF (edge alignment)
+    handles both.
+    """
+    pair = make_pair(key, shape, amplitude=amplitude, nt=nt, dtype=dtype)
+    if mode == "inverted":
+        m1 = 1.0 - pair.m1
+    elif mode == "quadratic":
+        m1 = (1.0 - pair.m1) ** 2
+    else:
+        raise ValueError(f"unknown multimodal mode {mode!r}; "
+                         "expected 'inverted' or 'quadratic'")
+    return ImagePair(m0=pair.m0, m1=m1.astype(dtype), labels0=pair.labels0,
+                     labels1=pair.labels1, v_true=pair.v_true)
+
+
 def make_batch(key, shape, batch: int, amplitude: float = 0.6, nt: int = 4):
     """Batch of independent pairs (the ensemble/population-study workload)."""
     keys = jax.random.split(key, batch)

@@ -23,7 +23,8 @@ import numpy as np
 
 def synthetic_study(grids: Sequence[Tuple[int, int, int]], n_requests: int,
                     n_subjects: int, seed: int = 0, amplitude: float = 0.5,
-                    revisit_scale: float = 0.9, variant: str = "fd8-cubic"):
+                    revisit_scale: float = 0.9, variant: str = "fd8-cubic",
+                    measure: str = "ssd"):
     """Synthetic longitudinal request stream.
 
     ``n_subjects`` distinct subjects cycle through the request list; each
@@ -62,7 +63,7 @@ def synthetic_study(grids: Sequence[Tuple[int, int, int]], n_requests: int,
             scale = revisit_scale ** (visits[s] - 1)
             m1 = _tr.solve_state(pair.m0, scale * pair.v_true, cfg)[-1]
         requests.append(Request(m0=pair.m0, m1=m1, subject=name,
-                                variant=variant))
+                                variant=variant, measure=measure))
     return requests
 
 
@@ -109,6 +110,9 @@ def main(argv=None):
                     help="open-loop Poisson arrival rate (req/s); 0 = burst")
     ap.add_argument("--subjects", type=int, default=None)
     ap.add_argument("--variant", default="fd8-cubic")
+    ap.add_argument("--measure", default="ssd",
+                    help="distance measure for every request "
+                         "(ssd|ncc|ngf; a bucketing key)")
     ap.add_argument("--max-batch", type=int, default=2)
     ap.add_argument("--max-wait-ms", type=float, default=100.0)
     ap.add_argument("--max-newton", type=int, default=None)
@@ -138,7 +142,8 @@ def main(argv=None):
 
     grids = [(g, g, g) for g in grid_sizes]
     requests = synthetic_study(grids, n_requests, n_subjects,
-                               seed=args.seed, variant=args.variant)
+                               seed=args.seed, variant=args.variant,
+                               measure=args.measure)
     delays = poisson_delays(n_requests, args.rate, seed=args.seed)
 
     cfg = ServeConfig(max_batch=args.max_batch,

@@ -1,7 +1,8 @@
-"""Request queue with grid/variant bucketing and dynamic batching.
+"""Request queue with grid/variant/measure bucketing and dynamic batching.
 
 Only *compatible* requests can share a vmapped Newton-step wave: same grid
-shape (arrays stack), same solver variant (one compiled step). The queue
+shape (arrays stack), same solver variant and same distance measure (one
+compiled step — mixed-measure streams never share a wave). The queue
 keeps one FIFO bucket per :class:`BucketKey`; the batcher thread repeatedly
 asks for the next wave, which is formed from the bucket whose head request
 has waited longest, and dispatched as soon as it is full (``max_batch``) or
@@ -26,6 +27,7 @@ from .request import Request
 class BucketKey(NamedTuple):
     grid: Tuple[int, int, int]
     variant: str
+    measure: str = "ssd"
 
 
 @dataclass
@@ -39,7 +41,8 @@ class PendingRequest:
     @property
     def key(self) -> BucketKey:
         return BucketKey(grid=self.request.grid,
-                         variant=self.request.variant)
+                         variant=self.request.variant,
+                         measure=self.request.measure)
 
 
 class RequestQueue:

@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core import measures as _meas
 from repro.core import registration as _reg
 
 
@@ -30,6 +31,7 @@ class Request:
     m1: Any                        # (N1, N2, N3)
     subject: Optional[str] = None  # warm-start cache key (None = never cached)
     variant: str = "fd8-cubic"     # Table-6 solver variant (a bucketing key)
+    measure: str = "ssd"           # distance measure (a bucketing key)
 
     def __post_init__(self):
         if getattr(self.m0, "shape", None) != getattr(self.m1, "shape", None):
@@ -44,6 +46,11 @@ class Request:
             raise ValueError(
                 f"unknown variant {self.variant!r}; choose from "
                 f"{sorted(_reg.VARIANTS)}")
+        if not isinstance(self.measure, str):
+            # Requests are wire-shaped records; keep the bucketing key (and
+            # any future serialization) a plain string.
+            raise ValueError("Request.measure must be a string name")
+        _meas.resolve(self.measure)  # raises on unknown names
 
     @property
     def grid(self) -> Tuple[int, int, int]:

@@ -4,8 +4,8 @@ Pipeline (three threads, two depth-1 hand-off queues — the double buffer):
 
     submit() ──► RequestQueue ──► [batcher] ──► wave queue ──► [solver]
                  (bucketed by      forms waves,  (depth 1)      runs the
-                  grid, variant)   stacks host                  vmapped /
-                                   arrays, looks                sharded
+                  grid, variant,   stacks host                  vmapped /
+                  measure)         arrays, looks                sharded
                                    up warm starts               Newton solve
                                         │
     futures ◄── [collector] ◄── collect queue (depth 1) ◄───────┘
@@ -20,7 +20,10 @@ Waves are padded to a fixed width (``max_batch``, repeating the first pair)
 so every wave of a bucket reuses one compiled step; per-pair masking inside
 ``gauss_newton.solve_batch`` already freezes converged lanes, and padded
 lanes are simply dropped at collection. Per-bucket compiled steps are built
-once and cached — the per-wave cost is the solve, not retracing.
+once and cached — the per-wave cost is the solve, not retracing. On the
+single-device path the compiled step donates the wave's velocity buffer
+(``_make_batch_step(donate=True)``): the dominant ``(P, 3, N...)`` array is
+aliased through each Newton step instead of double-buffered per wave.
 
 Warm starts: requests tagged with a ``subject`` that the
 :class:`~repro.serve.cache.WarmStartCache` knows start from the prior
@@ -55,7 +58,8 @@ _SENTINEL = object()
 
 @dataclass(frozen=True)
 class ServeConfig:
-    """Server-level solver + batching knobs (per-request: variant, subject)."""
+    """Server-level solver + batching knobs (per-request: variant, measure,
+    subject)."""
 
     # dynamic batching
     max_batch: int = 4            # wave width (padding target)
@@ -283,7 +287,8 @@ class Server:
         c = self.config
         return _reg.make_transport_config(
             key.variant, nt=c.nt, backend=c.backend,
-            mixed_precision=c.mixed_precision, use_plan=c.use_plan)
+            mixed_precision=c.mixed_precision, use_plan=c.use_plan,
+            measure=key.measure)
 
     def _step_for(self, key: BucketKey):
         step = self._steps.get(key)
@@ -295,7 +300,7 @@ class Server:
                     self.config.mesh, cfg_t, self._gn, self._slab_axis,
                     self.config.halo, ens_axis=self._ens_axis)
             else:
-                step = _gn._make_batch_step(cfg_t, self._gn)
+                step = _gn._make_batch_step(cfg_t, self._gn, donate=True)
             self._steps[key] = step
         return step
 
@@ -311,7 +316,8 @@ class Server:
                     lambda m, w: _metrics.warp_image(m, w, cfg_t))(m0b, vb)
                 num = jnp.sqrt(jnp.sum((warped - m1b) ** 2, axis=(1, 2, 3)))
                 den = jnp.sqrt(jnp.sum((m1b - m0b) ** 2, axis=(1, 2, 3)))
-                return num / jnp.maximum(den, 1e-30)
+                # Identical pairs are already matched: report 0, not NaN/huge.
+                return jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
 
             scorer = self._scorers.setdefault(key, jax.jit(score))
         return scorer
@@ -339,7 +345,7 @@ class Server:
                 else:
                     res = _gn.solve_batch(
                         wave.m0, wave.m1, cfg_t, self._gn, v0=wave.v0,
-                        gnorm_ref=wave.gnorm_ref, step_fn=step)
+                        gnorm_ref=wave.gnorm_ref, step_fn=step, donate=True)
                     v_host = res.v
                 # Dispatch scoring asynchronously; the collector forces it
                 # while the solver starts the next wave.

@@ -1,0 +1,271 @@
+"""Pluggable distance measures (SSD / NCC / NGF): math + end-to-end tests.
+
+Tolerance design (measured on this container, fp32):
+
+* ``terminal_adjoint`` is checked against autodiff of ``value`` *exactly* —
+  they are the same discrete functional, so the identity
+  ``lambda(1) == -grad_pixels(value) / cell_volume`` holds to fp32 rounding
+  (observed <= 1e-7 relative) and is asserted at 1e-5.
+* The *full* reduced gradient g(v) vs autodiff of the objective is NOT an
+  exact identity: the semi-Lagrangian adjoint solve is a discretization of
+  the continuous adjoint PDE, not the exact discrete transpose of the
+  forward interpolation. Even the pre-existing SSD path sits at ~9e-3
+  relative discrepancy at 8^3/fd8/cubic_bspline (and worse for cheaper
+  interpolants), so the cross-check asserts consistency at 5e-2 — it
+  catches sign/scale/term errors in a measure's adjoint, which is its job.
+* GN terminal operators are symmetric PSD by construction (NCC: scaled
+  projection complement; NGF: grad^T A grad with pointwise PSD A and the
+  exact discrete identity grad^T = -div of the central FD8/FFT stencils);
+  asserted at 1e-4 relative asymmetry (observed ~1e-6).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gradient as GR
+from repro.core import grid as G
+from repro.core import measures as M
+from repro.core import metrics as MET
+from repro.core import objective as OBJ
+from repro.core import transport as T
+from repro.core.registration import make_transport_config, register
+from repro.data import synthetic
+
+SHAPE = (8, 8, 8)
+MEASURES = ("ssd", "ncc", "ngf")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return synthetic.make_pair(jax.random.PRNGKey(2), SHAPE, amplitude=0.4,
+                               nt=2)
+
+
+def _cfg(measure="ssd", deriv="fd8", interp="cubic_bspline"):
+    return T.TransportConfig(interp=interp, deriv=deriv, nt=2,
+                             measure=measure)
+
+
+# ---------------------------------------------------------------------------
+# Registry / resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_resolve():
+    assert M.available() == ("ncc", "ngf", "ssd")
+    assert M.resolve("ssd").name == "ssd"
+    assert M.resolve(None).name == "ssd"          # default
+    assert M.resolve("NCC").name == "ncc"         # case-insensitive
+    custom = M.NGF(eps=0.05)
+    assert M.resolve(custom) is custom            # instances pass through
+    with pytest.raises(ValueError, match="unknown distance measure"):
+        M.resolve("mutual_information")
+
+
+def test_measures_are_hashable_and_compare_by_params():
+    # jit caches key on the config; frozen dataclasses must hash/compare.
+    assert M.NCC() == M.NCC() and hash(M.NCC()) == hash(M.NCC())
+    assert M.NGF(eps=0.05) != M.NGF(eps=0.1)
+    assert hash(_cfg("ncc")) == hash(_cfg("ncc"))
+
+
+# ---------------------------------------------------------------------------
+# SSD keeps the historical expressions bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_matches_legacy_expressions(pair):
+    cfg = _cfg("ssd")
+    ssd = M.resolve("ssd")
+    v_new = ssd.value(pair.m1, pair.m0, cfg)
+    v_old = OBJ.mismatch(pair.m1, pair.m0)
+    assert float(v_new) == float(v_old)           # identical arithmetic
+    np.testing.assert_array_equal(ssd.terminal_adjoint(pair.m1, pair.m0, cfg),
+                                  pair.m0 - pair.m1)
+    mt = pair.m0
+    np.testing.assert_array_equal(ssd.gn_terminal(mt, pair.m1, pair.m0, cfg),
+                                  -mt)
+
+
+# ---------------------------------------------------------------------------
+# Terminal adjoint == -dD/dm(1): exact identity vs autodiff
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("deriv", ["fd8", "fft"])
+@pytest.mark.parametrize("name", MEASURES)
+def test_terminal_adjoint_matches_autodiff(pair, name, deriv):
+    cfg = _cfg(name, deriv=deriv)
+    meas = M.resolve(name)
+    w = G.cell_volume(SHAPE)
+    # grad of value w.r.t. pixel values carries the quadrature weight.
+    lam_ad = -jax.grad(lambda mf: meas.value(mf, pair.m1, cfg))(pair.m0) / w
+    lam = meas.terminal_adjoint(pair.m0, pair.m1, cfg)
+    scale = float(jnp.max(jnp.abs(lam_ad))) or 1.0
+    err = float(jnp.max(jnp.abs(lam - lam_ad))) / scale
+    assert err <= 1e-5, f"{name}/{deriv}: terminal adjoint off by {err:.2e}"
+
+
+@pytest.mark.parametrize("name", MEASURES)
+def test_value_is_finite_and_nonnegative(pair, name):
+    cfg = _cfg(name)
+    meas = M.resolve(name)
+    d = float(meas.value(pair.m0, pair.m1, cfg))
+    assert np.isfinite(d) and d >= 0.0
+    d_self = float(meas.value(pair.m1, pair.m1, cfg))
+    # Identical images score strictly better than a mismatched pair. NCC
+    # vanishes exactly; NGF does not (flat regions with |grad m| ~ eps
+    # contribute ~1 wherever there is no edge to align), but still prefers
+    # the match.
+    assert d_self < d
+    if name == "ncc":
+        assert d_self < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Newton terminal operator: symmetric, PSD, cache-consistent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("deriv", ["fd8", "fft"])
+@pytest.mark.parametrize("name", MEASURES)
+def test_gn_terminal_symmetric_psd(pair, name, deriv):
+    cfg = _cfg(name, deriv=deriv)
+    meas = M.resolve(name)
+    cache = meas.make_cache(pair.m0, pair.m1, cfg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    u = jax.random.normal(k1, SHAPE)
+    w = jax.random.normal(k2, SHAPE)
+
+    def H(x):   # gn_terminal returns -H_D x
+        return -meas.gn_terminal(x, pair.m0, pair.m1, cfg, cache=cache)
+
+    huw = float(G.inner(H(u), w))
+    uhw = float(G.inner(u, H(w)))
+    scale = max(abs(huw), abs(uhw), 1e-12)
+    assert abs(huw - uhw) / scale <= 1e-4
+    assert float(G.inner(H(u), u)) >= -1e-5 * float(G.inner(u, u))
+
+
+@pytest.mark.parametrize("name", ["ncc", "ngf"])
+def test_gn_terminal_cache_matches_direct(pair, name):
+    cfg = _cfg(name)
+    meas = M.resolve(name)
+    mt = jax.random.normal(jax.random.PRNGKey(3), SHAPE)
+    cache = meas.make_cache(pair.m0, pair.m1, cfg)
+    with_cache = meas.gn_terminal(mt, pair.m0, pair.m1, cfg, cache=cache)
+    without = meas.gn_terminal(mt, pair.m0, pair.m1, cfg)
+    np.testing.assert_array_equal(with_cache, without)
+
+
+def test_gradient_state_carries_measure_cache(pair):
+    v = jnp.zeros((3,) + SHAPE)
+    for name, typ in (("ssd", type(None)), ("ncc", M._NCCCache),
+                      ("ngf", M._NGFCache)):
+        gs = GR.evaluate(pair.m0, pair.m1, v, 5e-4, 1e-4, _cfg(name))
+        assert isinstance(gs.measure_cache, typ)
+
+
+# ---------------------------------------------------------------------------
+# Full reduced gradient vs autodiff of the objective
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", MEASURES)
+def test_reduced_gradient_cross_check(pair, name):
+    """g(v) from the adjoint stack vs jax.grad of the objective, at v = 0.
+
+    Not an exact identity (see module docstring): 5e-2 catches any wrong
+    sign, scale, or missing term in a measure's adjoint while tolerating
+    the adjoint-vs-transpose discretization gap (~1e-2 even for SSD).
+    """
+    cfg = _cfg(name)
+    beta, gamma = 5e-4, 1e-4
+    v = jnp.zeros((3,) + SHAPE)
+    gs = GR.evaluate(pair.m0, pair.m1, v, beta, gamma, cfg)
+    g_ad = jax.grad(
+        lambda w: OBJ.objective(pair.m0, pair.m1, w, beta, gamma, cfg))(v)
+    g_ad = g_ad / G.cell_volume(SHAPE)
+    rel = float(G.norm_l2(gs.g - g_ad) / G.norm_l2(g_ad))
+    assert rel <= 5e-2, f"{name}: reduced gradient off by {rel:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# Guarded metrics
+# ---------------------------------------------------------------------------
+
+
+def test_relative_mismatch_identical_pair_is_zero(pair):
+    r = OBJ.relative_mismatch(pair.m0, pair.m0, pair.m0)
+    assert float(r) == 0.0
+    r2 = OBJ.relative_mismatch(pair.m1, pair.m0, pair.m0)  # m1 == m0, moved
+    assert np.isfinite(float(r2))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: contrast-inverted pair — SSD provably fails, NCC registers
+# ---------------------------------------------------------------------------
+
+E2E_SHAPE = (12, 12, 12)
+
+
+def _dice_after(pair, v, cfg):
+    warped = MET.warp_labels(pair.labels0, v, cfg)
+    return float(MET.dice(warped, pair.labels1))
+
+
+@pytest.fixture(scope="module")
+def inverted_pair():
+    return synthetic.make_multimodal_pair(jax.random.PRNGKey(5), E2E_SHAPE,
+                                          amplitude=0.6, nt=2,
+                                          mode="inverted")
+
+
+def _register_inverted(pair, measure):
+    return register(pair.m0, pair.m1, variant="fd8-linear", nt=2,
+                    beta=5e-4, max_newton=8, measure=measure)
+
+
+def test_e2e_contrast_inverted_ssd_fails(inverted_pair):
+    """SSD on anti-correlated intensities: Armijo still decreases the L2
+    objective (mismatch_rel dips a few percent below 1, or goes NaN once
+    the map folds), but registration demonstrably fails: Dice collapses
+    and the map is wildly non-diffeomorphic. Assertions are NaN-safe
+    (``not (x < t)`` is True for NaN)."""
+    pair = inverted_pair
+    res = _register_inverted(pair, "ssd")
+    cfg = make_transport_config("fd8-linear", nt=2)
+    d0 = float(MET.dice(pair.labels0, pair.labels1))
+    d1 = _dice_after(pair, res.v, cfg)
+    mis = float(res.mismatch_rel)
+    assert not (mis < 0.95), f"SSD 'succeeded' on inverted pair: {mis}"
+    assert not (d1 >= d0), f"SSD dice did not collapse: {d0:.3f}->{d1:.3f}"
+    assert not (res.detF["min"] > 0.0), "SSD map stayed diffeomorphic"
+
+
+def test_e2e_contrast_inverted_ncc_converges(inverted_pair):
+    pair = inverted_pair
+    res = _register_inverted(pair, "ncc")
+    cfg = make_transport_config("fd8-linear", nt=2)
+    d0 = float(MET.dice(pair.labels0, pair.labels1))
+    d1 = _dice_after(pair, res.v, cfg)
+    assert res.converged
+    assert d1 > d0 + 0.05, f"NCC dice did not improve: {d0:.3f}->{d1:.3f}"
+    assert d1 >= 0.85
+    assert res.detF["min"] > 0.0 and np.isfinite(res.detF["max"])
+
+
+@pytest.mark.slow
+def test_e2e_contrast_inverted_ngf_improves(inverted_pair):
+    """NGF needs more Newton iterations than NCC here (flat gradient far
+    from alignment) but reaches the same geometric quality."""
+    pair = inverted_pair
+    res = _register_inverted(pair, "ngf")
+    cfg = make_transport_config("fd8-linear", nt=2)
+    d0 = float(MET.dice(pair.labels0, pair.labels1))
+    d1 = _dice_after(pair, res.v, cfg)
+    assert d1 > d0 + 0.05
+    assert d1 >= 0.85
+    assert res.detF["min"] > 0.0
