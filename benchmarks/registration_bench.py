@@ -236,10 +236,19 @@ def run_matvec(
             for use_plan in (False, True):
                 cases.append(dict(
                     backend=backend, weights=wd_name, use_plan=use_plan,
+                    fused=False,
                     cfg=T.TransportConfig(interp="cubic_bspline", deriv="fd8",
                                           nt=4, backend=backend,
                                           weight_dtype=wd, use_plan=use_plan),
                 ))
+            # fused gather+epilogue Pallas kernel: the PCG hot-loop path
+            # (one HBM pass per transport step instead of three).
+            cases.append(dict(
+                backend=backend, weights=wd_name, use_plan=True, fused=True,
+                cfg=T.TransportConfig(interp="cubic_bspline", deriv="fd8",
+                                      nt=4, backend=backend, weight_dtype=wd,
+                                      use_plan=True, use_fused_matvec=True),
+            ))
 
     # Reference answer for the deviation column: the plan-free jnp/fp32
     # matvec, computed up front so every case (any --backends order/subset)
@@ -276,14 +285,15 @@ def run_matvec(
         max_dev = float(jnp.max(jnp.abs(hv - ref_hv)))
         rec = dict(
             backend=case["backend"], weights=case["weights"],
-            use_plan=case["use_plan"], per_matvec_ms=per_matvec_ms,
-            evaluate_ms=evaluate_ms,
+            use_plan=case["use_plan"], fused=case["fused"],
+            per_matvec_ms=per_matvec_ms, evaluate_ms=evaluate_ms,
             max_abs_dev_vs_plan_free_fp32=max_dev,
         )
         records.append(rec)
         rows.append([
             case["backend"], case["weights"],
-            "plan" if case["use_plan"] else "no-plan",
+            "fused" if case["fused"] else
+            ("plan" if case["use_plan"] else "no-plan"),
             fmt(per_matvec_ms, 2), fmt(evaluate_ms, 2), fmt(max_dev),
         ])
 
@@ -293,9 +303,10 @@ def run_matvec(
         ["backend", "weights", "mode", "matvec ms", "eval ms", "|dev|"],
         rows)
 
-    def _ms(backend, weights, use_plan):
+    def _ms(backend, weights, use_plan, fused=False):
         for r in records:
-            if (r["backend"], r["weights"], r["use_plan"]) == (backend, weights, use_plan):
+            if (r["backend"], r["weights"], r["use_plan"],
+                    r["fused"]) == (backend, weights, use_plan, fused):
                 return r["per_matvec_ms"]
         return None
 
@@ -306,6 +317,14 @@ def run_matvec(
         print(f"[bench] plan speedup (jnp fp32, {n}^3): {speedup:.2f}x "
               f"({off:.2f} ms -> {on:.2f} ms per matvec)")
 
+    fused_speedup = None
+    fused_ms = _ms("jnp", "fp32", True, fused=True)
+    if fused_ms and on:
+        fused_speedup = on / fused_ms
+        print(f"[bench] fused-kernel speedup vs plan-apply (jnp fp32, "
+              f"{n}^3): {fused_speedup:.2f}x "
+              f"({on:.2f} ms -> {fused_ms:.2f} ms per matvec)")
+
     entry = dict(
         ts=time.time(),
         grid=list(grid),
@@ -314,6 +333,7 @@ def run_matvec(
         host_devices=jax.device_count(),
         results=records,
         plan_speedup_jnp_fp32=speedup,
+        fused_speedup_vs_plan_jnp_fp32=fused_speedup,
     )
     _append_json(RESULTS_DIR / out, entry)
     print(f"[bench] appended entry to {RESULTS_DIR / out}")
@@ -322,6 +342,11 @@ def run_matvec(
     if n >= 16 and speedup is not None:
         assert speedup > 1.0, (
             f"plan-based matvec not faster at {n}^3: {speedup:.2f}x")
+    # acceptance: the fused Pallas matvec beats the plan-apply path by >=
+    # 1.3x at 24^3 (the speed-campaign floor; measured ~2x).
+    if n >= 24 and fused_speedup is not None:
+        assert fused_speedup >= 1.3, (
+            f"fused matvec below 1.3x at {n}^3: {fused_speedup:.2f}x")
     return entry
 
 
@@ -347,32 +372,9 @@ def run_dist(
     timing_iters: int = 3,
     out: str = "BENCH_dist.json",
 ):
-    import os
-    import subprocess
+    from repro.launch import hostenv
 
-    if jax.device_count() < devices:
-        # XLA honors --xla_force_host_platform_device_count only before
-        # backend init; re-exec with the forced device view. Forcing host
-        # devices only helps on the CPU backend, so pin JAX_PLATFORMS=cpu in
-        # the child — and guard with a sentinel so a child that still sees
-        # too few devices fails instead of re-execing forever.
-        if os.environ.get("_REPRO_DIST_BENCH_CHILD"):
-            raise SystemExit(
-                f"[bench] forced {devices} host devices but jax reports "
-                f"{jax.device_count()} ({jax.devices()}); aborting")
-        print(f"[bench] re-executing under {devices} forced host CPU devices")
-        env = dict(
-            os.environ,
-            XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-            JAX_PLATFORMS="cpu",
-            _REPRO_DIST_BENCH_CHILD="1",
-        )
-        cmd = [sys.executable, os.path.abspath(__file__), "--mode", "dist",
-               "--grid", str(n), "--devices", str(devices),
-               "--halo", str(halo), "--variant", variant]
-        res = subprocess.run(cmd, env=env)
-        if res.returncode != 0:
-            raise SystemExit(res.returncode)
+    if hostenv.ensure_host_devices(devices):
         return None
 
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -421,14 +423,24 @@ def run_dist(
         in_shardings=(img_sh, img_sh, vel_sh, sc_sh, sc_sh, sc_sh))
     gspmd_stats, gspmd_rec = measure(gspmd_step, "gspmd fallback")
 
+    # int8 halo compression: identical shard_map step with quantized halo
+    # payloads on the wire (remote halo rows lossy, owned interior exact).
+    int8_step = D.make_slab_step(mesh, cfg, gn, "slab", halo, compress="int8")
+    int8_stats, int8_rec = measure(int8_step, f"halo + int8 wire (halo={halo})")
+
     dv = float(jnp.max(jnp.abs(halo_stats.v_new - gspmd_stats.v_new)))
+    dv8 = float(jnp.max(jnp.abs(halo_stats.v_new - int8_stats.v_new)))
     ratio = halo_rec["collective_bytes"] / max(gspmd_rec["collective_bytes"], 1.0)
+    int8_saving = 1.0 - (int8_rec["collective_bytes"]
+                         / max(halo_rec["collective_bytes"], 1.0))
     print_table(
         f"Slab-parallel Newton step at {n}^3 on {devices} devices "
         f"({variant}): explicit halo exchange vs GSPMD all-gather fallback",
-        ["path", "coll MB/step", "ms/step", "max |dv| vs other"],
+        ["path", "coll MB/step", "ms/step", "max |dv| vs halo"],
         [["halo", fmt(halo_rec["collective_bytes"] / 1e6, 2),
-          fmt(halo_rec["step_ms"], 0), fmt(dv)],
+          fmt(halo_rec["step_ms"], 0), "0"],
+         ["halo+int8", fmt(int8_rec["collective_bytes"] / 1e6, 2),
+          fmt(int8_rec["step_ms"], 0), fmt(dv8)],
          ["gspmd", fmt(gspmd_rec["collective_bytes"] / 1e6, 2),
           fmt(gspmd_rec["step_ms"], 0), fmt(dv)]])
 
@@ -439,19 +451,27 @@ def run_dist(
         halo=halo,
         variant=variant,
         halo_path=halo_rec,
+        halo_int8=int8_rec,
         gspmd_fallback=gspmd_rec,
         collective_bytes_ratio=ratio,
+        int8_collective_saving=int8_saving,
         max_abs_dv=dv,
+        max_abs_dv_int8=dv8,
     )
     _append_json(RESULTS_DIR / out, entry)
     print(f"[bench] appended entry to {RESULTS_DIR / out}")
 
-    # acceptance: the halo path moves fewer collective bytes than GSPMD and
-    # agrees numerically (fp32 reduction-order noise only).
+    # acceptance: the halo path moves fewer collective bytes than GSPMD,
+    # int8 compression moves fewer still, and both agree numerically (exact
+    # path to fp32 reduction noise; int8 to quantization noise).
     assert halo_rec["collective_bytes"] < gspmd_rec["collective_bytes"], (
         f"halo path not cheaper: {halo_rec['collective_bytes']:.3e} >= "
         f"{gspmd_rec['collective_bytes']:.3e}")
+    assert int8_rec["collective_bytes"] < halo_rec["collective_bytes"], (
+        f"int8 wire not cheaper: {int8_rec['collective_bytes']:.3e} >= "
+        f"{halo_rec['collective_bytes']:.3e}")
     assert dv < 1e-3, dv
+    assert dv8 < 5e-2, dv8
     return entry
 
 
@@ -713,10 +733,284 @@ def run_measures(
     return entry
 
 
+# ---------------------------------------------------------------------------
+# Roofline mode: per-kernel achieved-vs-roofline fractions + collective bytes.
+#
+# Jits each hot kernel of the solve (interp plan-apply, FD8 gradient, fused
+# PCG matvec, full Newton step), walks the compiled HLO with the trip-count-
+# aware cost model (repro.roofline.hlo), and records flops / HBM bytes /
+# collective bytes, the no-overlap roofline time bound under the TPU v5e
+# constants, and the achieved fraction (bound / measured wall time) into
+# results/BENCH_roofline.json. With forced host devices it also isolates the
+# sharded matvec's collective bytes (eval+matvec minus eval alone) and
+# checks them against the checked-in results/roofline_baseline.json — a >20%
+# regression fails the run (and CI).
+# ---------------------------------------------------------------------------
+
+
+def run_roofline(
+    n: int = 64,
+    devices: int = 8,
+    halo: int = 6,
+    variant: str = "fd8-cubic",
+    seed: int = 7,
+    timing_iters: int = 3,
+    smoke: bool = False,
+    out: str = "BENCH_roofline.json",
+):
+    from repro.launch import hostenv
+
+    if smoke:
+        n, devices, timing_iters = min(n, 24), min(devices, 2), 2
+    if n >= 256 and jax.default_backend() not in ("gpu", "cuda"):
+        # 256^3 fields (16 GiB of fp32 trajectories per solve) need a real
+        # accelerator; host runs clamp to the largest CPU-feasible grid.
+        print(f"[bench] 256^3 roofline is GPU-gated; clamping to 128^3")
+        n = 128
+    if hostenv.ensure_host_devices(devices):
+        return None
+
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import derivatives as DV
+    from repro.core import gauss_newton as GN
+    from repro.core import gradient as GR
+    from repro.core import hessian as HS
+    from repro.core import interp as I
+    from repro.core.registration import make_transport_config
+    from repro.data import synthetic as S
+    from repro.distributed import halo as H
+    from repro.roofline import analyze_hlo, achieved_fraction, kernel_roofline
+
+    grid = (n, n, n)
+    pair = synthetic.make_pair(jax.random.PRNGKey(seed), grid, amplitude=0.5)
+    v = 0.3 * S.random_velocity(jax.random.PRNGKey(seed + 1), grid)
+    vt = S.random_velocity(jax.random.PRNGKey(seed + 2), grid, amplitude=0.2)
+    beta, gamma = 5e-4, 1e-4
+    cfg = make_transport_config(variant, nt=4)
+    cfg_fused = make_transport_config(variant, nt=4, use_fused_matvec=True)
+    gn = GN.GNConfig()
+
+    def measure(fn, args, label):
+        compiled = jax.jit(fn).lower(*args).compile()
+        costs = analyze_hlo(compiled.as_text())
+        res = jax.block_until_ready(compiled(*args))  # warm
+        t0 = time.perf_counter()
+        for _ in range(timing_iters):
+            res = compiled(*args)
+        jax.block_until_ready(res)
+        measured_s = (time.perf_counter() - t0) / timing_iters
+        # stencil/gather kernels are elementwise-dominated: their compute
+        # term is dot FLOPs + 1-per-element float arithmetic
+        flops = costs.flops + costs.ew_flops
+        kr = kernel_roofline(flops, costs.mem_bytes, costs.coll_bytes)
+        rec = dict(
+            flops=flops, dot_flops=costs.flops, ew_flops=costs.ew_flops,
+            mem_bytes=costs.mem_bytes,
+            collective_bytes=costs.coll_bytes, intensity=kr.intensity,
+            bound=kr.bound, roofline_s=kr.roofline_s, measured_s=measured_s,
+            achieved_fraction=achieved_fraction(kr.roofline_s, measured_s),
+        )
+        print(f"[bench] {label}: {flops / 1e9:.3f} GFLOP, "
+              f"{costs.mem_bytes / 1e6:.1f} MB, {kr.bound}-bound, "
+              f"roofline {kr.roofline_s * 1e6:.1f} us vs measured "
+              f"{measured_s * 1e3:.2f} ms")
+        return rec
+
+    # Per-Newton-step invariants (plans, trajectory gradients) built once;
+    # the kernels below are the per-matvec / per-step hot loop.
+    gs = jax.jit(
+        lambda m0, m1, v: GR.evaluate(m0, m1, v, beta, gamma, cfg)
+    )(pair.m0, pair.m1, v)
+    gs = jax.block_until_ready(gs)
+    coef = I.prefilter_for(pair.m0, cfg.interp)
+
+    kernels = {}
+    kernels["interp"] = measure(
+        lambda c: I.apply_plan(gs.plan_fwd, c), (coef,), "interp (plan apply)")
+    kernels["fd8"] = measure(
+        lambda f: DV.fd8_grad(f), (pair.m0,), "fd8 gradient")
+    kernels["fused_matvec"] = measure(
+        lambda vt_, gs_, v_: HS.matvec(vt_, gs_, v_, beta, gamma, cfg_fused),
+        (vt, gs, v), "fused matvec")
+    kernels["matvec_xla"] = measure(
+        lambda vt_, gs_, v_: HS.matvec(vt_, gs_, v_, beta, gamma, cfg),
+        (vt, gs, v), "plan matvec (XLA)")
+    if not smoke:  # full-step XLA compile takes minutes on host CPU
+        step_args = (pair.m0, pair.m1, v, jnp.float32(beta),
+                     jnp.float32(gamma), jnp.float32(0.5))
+        kernels["newton_step"] = measure(
+            GN._build_step(cfg, gn), step_args, "newton step")
+
+    # Sharded matvec collective bytes: lower eval-only and eval+matvec under
+    # shard_map and difference the collective bytes (the eval collectives —
+    # plan build, trajectory halos — are common to both modules).
+    matvec_coll = None
+    if devices > 1 and n % devices == 0:
+        mesh = Mesh(np.array(jax.devices()[:devices]).reshape(devices),
+                    ("slab",))
+        shard = H.ShardInfo(axis="slab", nshards=devices, halo=halo)
+        cfg_sh = cfg._replace(shard=shard)
+        img, vel = P("slab", None, None), P(None, "slab", None, None)
+
+        def eval_only(m0, m1, v_):
+            return GR.evaluate(m0, m1, v_, beta, gamma, cfg_sh).g
+
+        def eval_mv(vt_, m0, m1, v_):
+            gs_l = GR.evaluate(m0, m1, v_, beta, gamma, cfg_sh)
+            return HS.matvec(vt_, gs_l, v_, beta, gamma, cfg_sh)
+
+        def coll(fn, in_specs, args):
+            wrapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=vel, check_rep=False)
+            text = jax.jit(wrapped).lower(*args).compile().as_text()
+            return analyze_hlo(text).coll_bytes
+
+        c_eval = coll(eval_only, (img, img, vel), (pair.m0, pair.m1, v))
+        c_both = coll(eval_mv, (vel, img, img, vel), (vt, pair.m0, pair.m1, v))
+        matvec_coll = max(c_both - c_eval, 0.0)
+        print(f"[bench] sharded matvec collectives ({devices} slabs): "
+              f"{matvec_coll / 1e6:.3f} MB/matvec "
+              f"(eval+mv {c_both / 1e6:.2f} - eval {c_eval / 1e6:.2f})")
+
+    print_table(
+        f"Roofline at {n}^3 ({variant}, Nt=4, TPU v5e constants)",
+        ["kernel", "GFLOP", "MB", "intensity", "bound", "roofline us",
+         "measured ms", "achieved"],
+        [[k, fmt(r["flops"] / 1e9, 3), fmt(r["mem_bytes"] / 1e6, 1),
+          fmt(r["intensity"], 2), r["bound"], fmt(r["roofline_s"] * 1e6, 1),
+          fmt(r["measured_s"] * 1e3, 2), fmt(r["achieved_fraction"], 4)]
+         for k, r in kernels.items()])
+
+    entry = dict(
+        ts=time.time(),
+        grid=list(grid),
+        devices=devices,
+        halo=halo,
+        variant=variant,
+        smoke=smoke,
+        backend=jax.default_backend(),
+        kernels=kernels,
+        matvec_collective_bytes=matvec_coll,
+    )
+    _append_json(RESULTS_DIR / out, entry)
+    print(f"[bench] appended entry to {RESULTS_DIR / out}")
+
+    # acceptance: every tracked kernel has nonzero cost/roofline entries.
+    for k in ("interp", "fd8", "fused_matvec"):
+        r = kernels[k]
+        assert r["flops"] > 0 and r["mem_bytes"] > 0, (k, r)
+        assert r["roofline_s"] > 0 and r["achieved_fraction"] > 0, (k, r)
+
+    # regression gate: sharded matvec collective bytes vs checked-in baseline
+    # for this (grid, devices) point; >20% growth fails.
+    baseline_path = RESULTS_DIR / "roofline_baseline.json"
+    if matvec_coll is not None and baseline_path.exists():
+        base = json.loads(baseline_path.read_text())
+        ref = next((b for b in base
+                    if b["grid"] == list(grid) and b["devices"] == devices),
+                   None)
+        if ref is not None:
+            ratio = matvec_coll / max(ref["matvec_collective_bytes"], 1.0)
+            print(f"[bench] matvec collective bytes vs baseline: "
+                  f"{ratio:.3f}x")
+            assert ratio <= 1.2, (
+                f"matvec collective bytes regressed {ratio:.2f}x over "
+                f"baseline {ref['matvec_collective_bytes']:.3e}")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Precision presets: fp32 vs bf16 plan weights vs mixed precision at scale.
+# Records quality/runtime per preset into results/BENCH_precision.json — the
+# number base of the README precision table.
+# ---------------------------------------------------------------------------
+
+
+def run_precision(
+    grids=(64, 128),
+    variant: str = "fd8-cubic",
+    seed: int = 7,
+    max_newton: int = 3,
+    smoke: bool = False,
+    out: str = "BENCH_precision.json",
+):
+    import numpy as np
+
+    if smoke:
+        grids, max_newton = (16,), 2
+
+    presets = [
+        ("fp32", dict()),
+        ("bf16-weights", dict(mixed_precision=True)),
+    ]
+    rows, records = [], []
+    for n in grids:
+        grid3 = (n, n, n)
+        newton = max_newton if n < 128 else 1
+        pair = synthetic.make_pair(jax.random.PRNGKey(seed), grid3,
+                                   amplitude=0.5)
+        v_ref = None
+        for name, kw in presets:
+            t0 = time.perf_counter()
+            res = register(pair.m0, pair.m1, variant=variant,
+                           max_newton=newton, **kw)
+            wall = time.perf_counter() - t0
+            if v_ref is None:
+                v_ref = np.asarray(res.v)
+                dv = 0.0
+            else:
+                dv = float(np.max(np.abs(np.asarray(res.v) - v_ref)))
+            rec = dict(
+                grid=list(grid3), preset=name, max_newton=newton,
+                mismatch_rel=float(res.mismatch_rel),
+                rel_grad=float(res.rel_grad), iters=res.iters,
+                matvecs=res.matvecs, detF_min=float(res.detF["min"]),
+                detF_max=float(res.detF["max"]), wall_s=wall,
+                max_abs_dv_vs_fp32=dv,
+            )
+            records.append(rec)
+            rows.append([f"{n}^3", name, fmt(res.mismatch_rel),
+                         fmt(res.rel_grad), res.iters, res.matvecs,
+                         fmt(res.detF["min"], 3), fmt(dv), fmt(wall, 1)])
+
+    print_table(
+        f"Precision presets ({variant}, Nt=4): fp32 vs bf16 interpolation "
+        "weights (quality must be preset-invariant)",
+        ["N", "preset", "mismatch", "|g|rel", "iters", "matvecs", "detF min",
+         "|dv| vs fp32", "time s"],
+        rows)
+
+    entry = dict(
+        ts=time.time(),
+        variant=variant,
+        seed=seed,
+        smoke=smoke,
+        host_devices=jax.device_count(),
+        results=records,
+    )
+    _append_json(RESULTS_DIR / out, entry)
+    print(f"[bench] appended entry to {RESULTS_DIR / out}")
+
+    # acceptance: bf16 weights do not change the registration outcome beyond
+    # interpolation-weight rounding (same iterations, tiny velocity delta).
+    by_grid = {}
+    for r in records:
+        by_grid.setdefault(tuple(r["grid"]), {})[r["preset"]] = r
+    for g, by in by_grid.items():
+        if "fp32" in by and "bf16-weights" in by:
+            assert abs(by["fp32"]["iters"] - by["bf16-weights"]["iters"]) <= 1
+            assert by["bf16-weights"]["max_abs_dv_vs_fp32"] < 5e-2
+    return entry
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode", choices=["variants", "api-smoke", "matvec",
-                                       "dist", "serve", "measures"],
+                                       "dist", "serve", "measures",
+                                       "roofline", "precision"],
                     default="variants")
     ap.add_argument("--grid", type=int, default=None)
     ap.add_argument("--max-newton", type=int, default=None)
@@ -731,8 +1025,8 @@ def main(argv=None):
     ap.add_argument("--halo", type=int, default=6,
                     help="dist mode: SL interpolation halo width (voxels)")
     ap.add_argument("--smoke", action="store_true",
-                    help="serve mode: CI-sized stream (small grids, short "
-                         "open-loop phase)")
+                    help="CI-sized run (serve/measures/roofline/precision "
+                         "modes): small grids, short phases")
     ap.add_argument("--grids", default=None,
                     help="serve mode: comma list of cubic grid sizes")
     ap.add_argument("--subjects", type=int, default=None,
@@ -781,6 +1075,14 @@ def main(argv=None):
     elif args.mode == "dist":
         run_dist(n=args.grid or 24, devices=args.devices, halo=args.halo,
                  variant=args.variant)
+    elif args.mode == "roofline":
+        run_roofline(n=args.grid or 64, devices=args.devices, halo=args.halo,
+                     variant=args.variant, smoke=args.smoke)
+    elif args.mode == "precision":
+        grids = (tuple(int(g) for g in args.grids.split(","))
+                 if args.grids else (64, 128))
+        run_precision(grids=grids, variant=args.variant,
+                      max_newton=args.max_newton or 3, smoke=args.smoke)
     else:
         run_modes(n=args.grid or 16, max_newton=args.max_newton or 20,
                   variant=args.variant)

@@ -29,6 +29,10 @@ class SolverOptions:
     nt: int = 4
     backend: str = "jnp"
     mixed_precision: bool = False
+    # fuse each PCG matvec's SL gather + RK2 epilogue into one Pallas kernel
+    # (kernels.interp3d.apply_plan_fused); requires use_plan. The scan-based
+    # XLA matvec stays the reference path.
+    use_fused_matvec: bool = False
     # build-once/apply-many interpolation plans (per-Newton-step gather
     # bases + weights reused by every SL step and PCG matvec); False selects
     # the per-step recomputation reference path.
@@ -62,6 +66,10 @@ class SolverOptions:
     slab_axis: Optional[str] = None
     ensemble_axis: Optional[str] = None
     halo: int = 6
+    # lossy int8 halo-exchange compression ("none" | "int8"): quantizes the
+    # SL/FD8 halo collective payloads (distributed.compression) to cut
+    # inter-device bytes; the owned slab interior stays exact.
+    halo_compression: str = "none"
     # multi-resolution schedule (mode "multires" or "auto")
     levels: Optional[Sequence[Tuple[int, int, int]]] = None
     n_levels: Optional[int] = None
@@ -82,9 +90,16 @@ class SolverOptions:
         if self.coarse_variant is not None and self.coarse_variant not in _reg.VARIANTS:
             raise ValueError(f"unknown coarse_variant {self.coarse_variant!r}")
         _meas.resolve(self.measure)  # raises on unknown measure specs
-        if self.mesh is not None and self.backend != "jnp":
+        if self.mesh is not None and self.backend not in ("jnp", "pallas"):
             raise ValueError(
-                "slab-distributed solving (mesh=...) requires backend='jnp'")
+                "slab-distributed solving (mesh=...) requires backend "
+                f"'jnp' or 'pallas', got {self.backend!r}")
+        if self.halo_compression not in ("none", "int8"):
+            raise ValueError(
+                f"halo_compression must be 'none' or 'int8', "
+                f"got {self.halo_compression!r}")
+        if self.use_fused_matvec and not self.use_plan:
+            raise ValueError("use_fused_matvec requires use_plan=True")
 
     def resolve_mode(self, is_batched: bool, grid: Tuple[int, int, int]) -> str:
         """Concrete solve strategy for a problem of the given shape."""

@@ -55,7 +55,8 @@ class Solver:
             variant=o.variant, beta=o.beta, gamma=o.gamma, nt=o.nt,
             tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
             backend=o.backend, mixed_precision=o.mixed_precision,
-            use_plan=o.use_plan, measure=o.measure, v0=o.v0,
+            use_plan=o.use_plan, use_fused_matvec=o.use_fused_matvec,
+            measure=o.measure, v0=o.v0,
             gnorm_ref=o.gnorm_ref, verbose=o.verbose,
         )
         if mode == "batch":
@@ -81,8 +82,10 @@ class Solver:
         common = dict(
             mesh=o.mesh, variant=o.variant, beta=o.beta, gamma=o.gamma,
             nt=o.nt, tol_rel_grad=o.tol_rel_grad, max_newton=o.max_newton,
-            slab_axis=o.slab_axis, halo=o.halo,
+            slab_axis=o.slab_axis, halo=o.halo, backend=o.backend,
             mixed_precision=o.mixed_precision, use_plan=o.use_plan,
+            use_fused_matvec=o.use_fused_matvec,
+            halo_compression=o.halo_compression,
             measure=o.measure, v0=o.v0, gnorm_ref=o.gnorm_ref,
             verbose=o.verbose,
         )

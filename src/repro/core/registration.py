@@ -89,15 +89,20 @@ def make_transport_config(
     mixed_precision: bool = False,
     use_plan: bool = True,
     measure: object = "ssd",
+    use_fused_matvec: bool = False,
 ) -> _tr.TransportConfig:
     """``use_plan=False`` disables the build-once/apply-many interpolation
     plans (per-step weight recomputation; the pre-plan reference path, kept
     for benchmarking and regression tests). ``measure`` selects the distance
     measure (``"ssd" | "ncc" | "ngf"`` or a ``measures.DistanceMeasure``
-    instance)."""
+    instance). ``use_fused_matvec`` routes the PCG Hessian matvec through
+    the fused gather+epilogue Pallas kernel (requires ``use_plan``)."""
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; choose from {sorted(VARIANTS)}")
     _meas.resolve(measure)  # fail fast on unknown measure names
+    if use_fused_matvec and not use_plan:
+        raise ValueError("use_fused_matvec requires use_plan=True (the fused "
+                         "kernel consumes prebuilt interpolation plans)")
     sel = VARIANTS[variant]
     return _tr.TransportConfig(
         interp=sel["interp"],
@@ -107,6 +112,7 @@ def make_transport_config(
         weight_dtype=jnp.bfloat16 if mixed_precision else None,
         use_plan=use_plan,
         measure=measure,
+        use_fused_matvec=use_fused_matvec,
     )
 
 
@@ -124,6 +130,7 @@ def register(
     mixed_precision: bool = False,
     use_plan: bool = True,
     measure: object = "ssd",
+    use_fused_matvec: bool = False,
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref: Optional[float] = None,
     verbose: bool = False,
@@ -140,7 +147,8 @@ def register(
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan, measure=measure)
+                                use_plan=use_plan, measure=measure,
+                                use_fused_matvec=use_fused_matvec)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -202,6 +210,7 @@ def register_multires(
     mixed_precision: bool = False,
     use_plan: bool = True,
     measure: object = "ssd",
+    use_fused_matvec: bool = False,
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref: Optional[float] = None,
     verbose: bool = False,
@@ -216,7 +225,8 @@ def register_multires(
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan, measure=measure)
+                                use_plan=use_plan, measure=measure,
+                                use_fused_matvec=use_fused_matvec)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -231,7 +241,8 @@ def register_multires(
     if coarse_variant is not None:
         coarse_cfg = make_transport_config(coarse_variant, nt=nt, backend=backend,
                                            mixed_precision=mixed_precision,
-                                           use_plan=use_plan, measure=measure)
+                                           use_plan=use_plan, measure=measure,
+                                           use_fused_matvec=use_fused_matvec)
         level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
     res = _mr.solve_multires(
         m0, m1, cfg, gn_cfg,
@@ -288,6 +299,7 @@ def register_batch(
     mixed_precision: bool = False,
     use_plan: bool = True,
     measure: object = "ssd",
+    use_fused_matvec: bool = False,
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref=None,
     verbose: bool = False,
@@ -302,7 +314,8 @@ def register_batch(
     """
     cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan, measure=measure)
+                                use_plan=use_plan, measure=measure,
+                                use_fused_matvec=use_fused_matvec)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -355,9 +368,12 @@ def register_sharded(
     level_newton: Optional[Sequence[int]] = None,
     coarse_variant: Optional[str] = None,
     presmooth_sigma: float = 0.0,
+    backend: str = "jnp",
     mixed_precision: bool = False,
     use_plan: bool = True,
     measure: object = "ssd",
+    use_fused_matvec: bool = False,
+    halo_compression: str = "none",
     v0: Optional[jnp.ndarray] = None,
     gnorm_ref=None,
     verbose: bool = False,
@@ -392,9 +408,10 @@ def register_sharded(
     """
     from repro.distributed import claire_dist as _dist
 
-    cfg = make_transport_config(variant, nt=nt, backend="jnp",
+    cfg = make_transport_config(variant, nt=nt, backend=backend,
                                 mixed_precision=mixed_precision,
-                                use_plan=use_plan, measure=measure)
+                                use_plan=use_plan, measure=measure,
+                                use_fused_matvec=use_fused_matvec)
     gn_cfg = _gn.GNConfig(
         beta=beta,
         gamma=gamma,
@@ -408,8 +425,8 @@ def register_sharded(
             raise ValueError("batched sharded registration has no multires mode")
         res = _dist.solve_ensemble_slab(
             m0, m1, cfg, gn_cfg, mesh=mesh, ens_axis=ensemble_axis,
-            slab_axis=slab_axis, halo=halo, v0=v0, gnorm_ref=gnorm_ref,
-            verbose=verbose)
+            slab_axis=slab_axis, halo=halo, compress=halo_compression,
+            v0=v0, gnorm_ref=gnorm_ref, verbose=verbose)
         v = _unshard(res.v, mesh)
         m_warped, mis, detf = _score_batch(m0, m1, v, cfg)
         return BatchRegistrationResult(
@@ -432,16 +449,17 @@ def register_sharded(
         level_cfgs = None
         if coarse_variant is not None:
             coarse_cfg = make_transport_config(
-                coarse_variant, nt=nt, backend="jnp",
+                coarse_variant, nt=nt, backend=backend,
                 mixed_precision=mixed_precision, use_plan=use_plan,
-                measure=measure)
+                measure=measure, use_fused_matvec=use_fused_matvec)
             level_cfgs = [coarse_cfg] * (len(levels) - 1) + [cfg]
 
         def solve_fn(m0_l, m1_l, cfg_l, gn_l, **kw):
             # Re-shard each level onto the mesh: restrict/prolong run on the
             # gathered fields, the level solve is slab-parallel again.
             return _dist.solve_slab(m0_l, m1_l, cfg_l, gn_l, mesh=mesh,
-                                    slab_axis=slab_axis, halo=halo, **kw)
+                                    slab_axis=slab_axis, halo=halo,
+                                    compress=halo_compression, **kw)
 
         res = _mr.solve_multires(
             m0, m1, cfg, gn_cfg,
@@ -474,7 +492,8 @@ def register_sharded(
         )
 
     res = _dist.solve_slab(m0, m1, cfg, gn_cfg, mesh=mesh,
-                           slab_axis=slab_axis, halo=halo, v0=v0,
+                           slab_axis=slab_axis, halo=halo,
+                           compress=halo_compression, v0=v0,
                            gnorm_ref=gnorm_ref, verbose=verbose)
     v = _unshard(res.v, mesh)
     m_warped, mis, detf = _score_single(m0, m1, v, cfg)

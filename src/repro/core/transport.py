@@ -52,6 +52,11 @@ class TransportConfig(NamedTuple):
                    terminal condition in ``hessian.matvec`` all dispatch on
                    it via ``measures.resolve``; ``"ssd"`` reproduces the
                    historical hard-coded behavior bit-for-bit.
+    use_fused_matvec : run the PCG Hessian matvec through the fused
+                   gather+epilogue Pallas kernel (one HBM pass per transport
+                   step, statically unrolled time loop); requires
+                   ``use_plan=True``. ``False`` keeps the scan-based XLA
+                   matvec as the reference path.
     """
 
     interp: str = "cubic_bspline"
@@ -62,6 +67,7 @@ class TransportConfig(NamedTuple):
     use_plan: bool = True
     shard: object = None
     measure: object = "ssd"
+    use_fused_matvec: bool = False
 
 
 def _dt(cfg: TransportConfig) -> float:

@@ -195,15 +195,16 @@ def slab_solve_shardings(mesh: Mesh, slab_axis: str,
 
 
 def _check_slab_cfg(cfg: _tr.TransportConfig):
-    if cfg.backend != "jnp":
+    if cfg.backend not in ("jnp", "pallas"):
         raise NotImplementedError(
-            "slab-distributed solves run on the XLA backend; Pallas halo-tile "
-            "kernels inside shard_map are a ROADMAP open item")
+            f"slab-distributed solves support backend 'jnp' (XLA reference) "
+            f"or 'pallas' (halo-tile kernels inside shard_map), got "
+            f"{cfg.backend!r}")
 
 
 def make_slab_step(mesh: Mesh, cfg: _tr.TransportConfig, gn: _gn.GNConfig,
                    slab_axis: Optional[str] = None, halo: int = 6,
-                   ens_axis: Optional[str] = None):
+                   ens_axis: Optional[str] = None, compress: str = "none"):
     """Jitted Newton step running entirely under ``shard_map``.
 
     The step *body* is the unmodified ``gauss_newton._build_step`` — the
@@ -221,7 +222,8 @@ def make_slab_step(mesh: Mesh, cfg: _tr.TransportConfig, gn: _gn.GNConfig,
     _check_slab_cfg(cfg)
     slab_axis = slab_axis or slab_axis_name(mesh)
     shard = _halo.ShardInfo(axis=slab_axis,
-                            nshards=axis_size(mesh, slab_axis), halo=halo)
+                            nshards=axis_size(mesh, slab_axis), halo=halo,
+                            backend=cfg.backend, compress=compress)
     body = _gn._build_step(cfg._replace(shard=shard), gn)
 
     if ens_axis is None:
@@ -264,6 +266,7 @@ def solve_slab(
     mesh: Mesh,
     slab_axis: Optional[str] = None,
     halo: int = 6,
+    compress: str = "none",
     v0: jnp.ndarray | None = None,
     gnorm_ref: float | None = None,
     eta0: float | None = None,
@@ -278,7 +281,7 @@ def solve_slab(
     _check_slab_cfg(cfg)
     slab_axis = slab_axis or slab_axis_name(mesh)
     _validate_slab(m0.shape, mesh, slab_axis, halo)
-    step = make_slab_step(mesh, cfg, gn, slab_axis, halo)
+    step = make_slab_step(mesh, cfg, gn, slab_axis, halo, compress=compress)
     img_sh, vel_sh = slab_solve_shardings(mesh, slab_axis)
     m0 = jax.device_put(jnp.asarray(m0), img_sh)
     m1 = jax.device_put(jnp.asarray(m1), img_sh)
@@ -299,6 +302,7 @@ def solve_ensemble_slab(
     ens_axis: Optional[str] = None,
     slab_axis: Optional[str] = None,
     halo: int = 6,
+    compress: str = "none",
     v0: jnp.ndarray | None = None,
     gnorm_ref=None,
     verbose: bool = False,
@@ -327,7 +331,7 @@ def solve_ensemble_slab(
             f"batch {m0.shape[0]} not divisible by ensemble axis "
             f"{ens_axis!r} of size {ne}")
     step = step_fn if step_fn is not None else make_slab_step(
-        mesh, cfg, gn, slab_axis, halo, ens_axis=ens_axis)
+        mesh, cfg, gn, slab_axis, halo, ens_axis=ens_axis, compress=compress)
     img_sh, vel_sh = slab_solve_shardings(mesh, slab_axis, ens_axis)
     m0 = jax.device_put(jnp.asarray(m0), img_sh)
     m1 = jax.device_put(jnp.asarray(m1), img_sh)

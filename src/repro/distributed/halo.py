@@ -29,12 +29,15 @@ from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import grid as _grid
 from repro.core import interp as _interp
 from repro.core.derivatives import FD8_COEFFS
+
+from . import compression as _comp
 
 
 class ShardInfo(NamedTuple):
@@ -46,11 +49,20 @@ class ShardInfo(NamedTuple):
     halo    : interpolation halo width in voxels (CFL bound + stencil margin);
               the FD8 halo (4) and the prefilter radius (7) are derived
               internally and do not need to be included.
+    backend : "jnp" (XLA reference) or "pallas" — routes the slab-local
+              compute (prefilter, plan gather, FD8 stencils) through the
+              Pallas kernels operating on the halo-extended tiles; the
+              collectives are identical either way.
+    compress: "none" or "int8" — quantize halo-exchange payloads on the wire
+              (distributed.compression absmax int8). Remote halo rows become
+              lossy; the owned slab interior stays exact.
     """
 
     axis: str
     nshards: int
     halo: int = 6
+    backend: str = "jnp"
+    compress: str = "none"
 
     def global_shape(self, local_shape) -> Tuple[int, int, int]:
         n1, n2, n3 = (int(n) for n in local_shape[-3:])
@@ -76,12 +88,39 @@ def exchange(f: jnp.ndarray, halo: int, shard: ShardInfo) -> jnp.ndarray:
         return f
     n_loc = f.shape[-3]
     n = shard.nshards
+    compress = shard.compress == "int8"
+
+    def _perm(x, perm):
+        """ppermute, int8 on the wire when halo compression is on (payload
+        quantized per hop with an absmax scale that travels alongside)."""
+        if not compress:
+            return lax.ppermute(x, shard.axis, perm=perm)
+        q, s = _comp.quantize_int8(x)
+        q = lax.ppermute(q, shard.axis, perm=perm)
+        s = lax.ppermute(s, shard.axis, perm=perm)
+        return _comp.dequantize_int8(q, s).astype(x.dtype)
+
     hops = -(-halo // n_loc)  # ceil
     if 2 * hops + 1 >= n:
-        full = lax.all_gather(f, shard.axis, axis=f.ndim - 3, tiled=True)
         n_glob = n_loc * n
         start = lax.axis_index(shard.axis) * n_loc
         idx = jnp.mod(start + jnp.arange(-halo, n_loc + halo), n_glob)
+        if compress:
+            # int8 all-gather; the own (interior) rows are re-spliced exactly
+            # below, so quantization only touches the remote halo rows.
+            q, s = _comp.quantize_int8(f)
+            full_q = lax.all_gather(q, shard.axis, axis=f.ndim - 3,
+                                    tiled=False)
+            scales = lax.all_gather(s, shard.axis)
+            full = (full_q.astype(f.dtype)
+                    * scales.reshape((n, 1, 1, 1)).astype(f.dtype))
+            full = full.reshape(f.shape[:-3] + (n_glob,) + f.shape[-2:])
+            ext = jnp.take(full, idx, axis=f.ndim - 3)
+            return jnp.concatenate(
+                [_x1(ext, 0, halo), f,
+                 _x1(ext, halo + n_loc, n_loc + 2 * halo)],
+                axis=f.ndim - 3)
+        full = lax.all_gather(f, shard.axis, axis=f.ndim - 3, tiled=True)
         return jnp.take(full, idx, axis=f.ndim - 3)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
@@ -98,8 +137,8 @@ def exchange(f: jnp.ndarray, halo: int, shard: ShardInfo) -> jnp.ndarray:
         if h == hops - 1:
             send_t = _x1(cur_t, n_loc - rem, n_loc)
             send_b = _x1(cur_b, 0, rem)
-        cur_t = lax.ppermute(send_t, shard.axis, perm=fwd)  # from left neighbor
-        cur_b = lax.ppermute(send_b, shard.axis, perm=bwd)  # from right neighbor
+        cur_t = _perm(send_t, fwd)  # from left neighbor
+        cur_b = _perm(send_b, bwd)  # from right neighbor
         top_parts.insert(0, cur_t)
         bot_parts.append(cur_b)
     top = jnp.concatenate(top_parts, axis=f.ndim - 3) if len(top_parts) > 1 \
@@ -134,6 +173,35 @@ def origin(f_or_shape, shard: ShardInfo):
 FD8_HALO = len(FD8_COEFFS)  # stencil radius 4
 
 
+def _vmap_leading(fn, ndim: int):
+    """Vectorize a 3D-field kernel over ``ndim - 3`` leading axes."""
+    for _ in range(ndim - 3):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def _fd8_x1_valid_pallas(f_ext: jnp.ndarray, h: float) -> jnp.ndarray:
+    """Pallas valid-mode x1 derivative of a halo-extended slab."""
+    from repro.kernels import pencil as _pencil
+
+    fn = _vmap_leading(
+        lambda g: _pencil.stencil_pencil_valid(g, 0, FD8_COEFFS,
+                                               scale=1.0 / h),
+        f_ext.ndim)
+    return fn(f_ext)
+
+
+def _fd8_axis_pallas(f: jnp.ndarray, axis3: int, h: float) -> jnp.ndarray:
+    """Pallas periodic FD8 derivative along local spatial axis ``axis3``."""
+    from repro.kernels import pencil as _pencil
+
+    fn = _vmap_leading(
+        lambda g: _pencil.stencil_pencil(g, axis3, FD8_COEFFS,
+                                         symmetric=False, scale=1.0 / h),
+        f.ndim)
+    return fn(f)
+
+
 def _fd8_x1_valid(f_ext: jnp.ndarray, n_loc: int, h: float) -> jnp.ndarray:
     """d/dx1 on the interior rows of a halo-extended slab (no wrap)."""
     r = FD8_HALO
@@ -157,9 +225,14 @@ def fd8_grad(f: jnp.ndarray, shard: ShardInfo) -> jnp.ndarray:
     h = _grid.spacing(shard.global_shape(f.shape))
     n_loc = f.shape[-3]
     f_ext = exchange(f, FD8_HALO, shard)
-    d0 = _fd8_x1_valid(f_ext, n_loc, h[0])
-    d1 = _fd8_axis_periodic(f, f.ndim - 2, h[1])
-    d2 = _fd8_axis_periodic(f, f.ndim - 1, h[2])
+    if shard.backend == "pallas":
+        d0 = _fd8_x1_valid_pallas(f_ext, h[0])
+        d1 = _fd8_axis_pallas(f, 1, h[1])
+        d2 = _fd8_axis_pallas(f, 2, h[2])
+    else:
+        d0 = _fd8_x1_valid(f_ext, n_loc, h[0])
+        d1 = _fd8_axis_periodic(f, f.ndim - 2, h[1])
+        d2 = _fd8_axis_periodic(f, f.ndim - 1, h[2])
     return jnp.stack([d0, d1, d2], axis=f.ndim - 3)
 
 
@@ -167,9 +240,14 @@ def fd8_div(w: jnp.ndarray, shard: ShardInfo) -> jnp.ndarray:
     """FD8 divergence of a vector field (3, N1/n, N2, N3) -> (N1/n, N2, N3)."""
     h = _grid.spacing(shard.global_shape(w.shape))
     n_loc = w.shape[-3]
-    d0 = _fd8_x1_valid(exchange(w[0], FD8_HALO, shard), n_loc, h[0])
-    d1 = _fd8_axis_periodic(w[1], w.ndim - 3, h[1])
-    d2 = _fd8_axis_periodic(w[2], w.ndim - 2, h[2])
+    if shard.backend == "pallas":
+        d0 = _fd8_x1_valid_pallas(exchange(w[0], FD8_HALO, shard), h[0])
+        d1 = _fd8_axis_pallas(w[1], 1, h[1])
+        d2 = _fd8_axis_pallas(w[2], 2, h[2])
+    else:
+        d0 = _fd8_x1_valid(exchange(w[0], FD8_HALO, shard), n_loc, h[0])
+        d1 = _fd8_axis_periodic(w[1], w.ndim - 3, h[1])
+        d2 = _fd8_axis_periodic(w[2], w.ndim - 2, h[2])
     return d0 + d1 + d2
 
 
@@ -197,6 +275,30 @@ def spectral_div(w: jnp.ndarray, shard: ShardInfo) -> jnp.ndarray:
 
 def _prefilter_pad(method: str) -> int:
     return _interp.PREFILTER_RADIUS if method == "cubic_bspline" else 0
+
+
+def _prefilter_local(f: jnp.ndarray, method: str, shard: ShardInfo) -> jnp.ndarray:
+    """Slab-local prefilter; Pallas pencil kernel on ``backend="pallas"``.
+
+    The Pallas prefilter wraps periodically on every axis, but the wrap
+    contamination along the non-periodic extended x1 axis only reaches the
+    prefilter radius — exactly the pad rows :func:`sl_coefficients` trims.
+    """
+    if shard.backend == "pallas" and method == "cubic_bspline":
+        from repro.kernels.prefilter.prefilter import prefilter3d_pallas
+
+        return _vmap_leading(prefilter3d_pallas, f.ndim)(f)
+    return _interp.prefilter_for(f, method)
+
+
+def _apply_plan_local(plan: _interp.InterpPlan, coef: jnp.ndarray,
+                      shard: ShardInfo) -> jnp.ndarray:
+    """Plan gather on the halo-extended coefficient slab (Pallas or XLA)."""
+    if shard.backend == "pallas":
+        from repro.kernels.interp3d.interp3d import apply_plan_pallas
+
+        return apply_plan_pallas(coef, plan)
+    return _interp.apply_plan(plan, coef)
 
 
 def build_plan(foot: jnp.ndarray, method: str, weight_dtype, shard: ShardInfo
@@ -229,7 +331,7 @@ def sl_coefficients(f: jnp.ndarray, method: str, shard: ShardInfo) -> jnp.ndarra
     """
     pad = _prefilter_pad(method)
     f_ext = exchange(f, shard.halo + pad, shard)
-    coef = _interp.prefilter_for(f_ext, method)
+    coef = _prefilter_local(f_ext, method, shard)
     if pad:
         coef = _x1(coef, pad, coef.shape[-3] - pad)
     return coef
@@ -238,7 +340,7 @@ def sl_coefficients(f: jnp.ndarray, method: str, shard: ShardInfo) -> jnp.ndarra
 def apply_plan(plan: _interp.InterpPlan, f: jnp.ndarray, method: str,
                shard: ShardInfo) -> jnp.ndarray:
     """One sharded SL step through a prebuilt halo plan (exchange + gather)."""
-    return _interp.apply_plan(plan, sl_coefficients(f, method, shard))
+    return _apply_plan_local(plan, sl_coefficients(f, method, shard), shard)
 
 
 def interp(f: jnp.ndarray, foot: jnp.ndarray, method: str, weight_dtype,
@@ -267,7 +369,7 @@ def trace_characteristic(v: jnp.ndarray, dt: float, method: str, sign: float,
     q_mid = x - sign * (0.5 * dt) * v / h
     coef = sl_coefficients(v, method, shard)
     plan = build_plan(q_mid, method, weight_dtype, shard)
-    v_mid = _interp.apply_plan(plan, coef)
+    v_mid = _apply_plan_local(plan, coef, shard)
     return x - sign * dt * v_mid / h
 
 

@@ -62,6 +62,61 @@ def pencil_blocks(shape: Sequence[int], axis: int,
     return block, grid, index_map
 
 
+def _stencil_valid_body(f_ref, o_ref, *, taps, axis, n_out, scale):
+    f = f_ref[...]
+    r = len(taps)
+
+    def window(start):
+        idx = [slice(None)] * f.ndim
+        idx[axis] = slice(start, start + n_out)
+        return f[tuple(idx)]
+
+    acc = None
+    for k, c in enumerate(taps, start=1):
+        term = c * (window(r + k) - window(r - k))
+        acc = term if acc is None else acc + term
+    o_ref[...] = acc * scale
+
+
+def stencil_pencil_valid(
+    f: jnp.ndarray,
+    axis: int,
+    taps: Tuple[float, ...],
+    scale: float = 1.0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Valid-mode antisymmetric stencil along ``axis`` of a halo-extended
+    field: input length ``n + 2*len(taps)`` along ``axis``, output length
+    ``n``. This is the sharded-slab x1 derivative, where the boundary rows
+    come from a collective halo exchange instead of periodic wrap — the
+    kernel reads static shifted windows of the pencil, no rolls.
+    """
+    if f.ndim != 3:
+        raise ValueError(f"expected 3D field, got shape {f.shape}")
+    r = len(taps)
+    n_out = f.shape[axis] - 2 * r
+    if n_out <= 0:
+        raise ValueError(
+            f"axis {axis} length {f.shape[axis]} too short for radius {r}")
+    if interpret is None:
+        interpret = interpret_default()
+    in_block, grid, index_map = pencil_blocks(f.shape, axis)
+    out_block = tuple(n_out if a == axis else in_block[a] for a in range(3))
+    out_shape = tuple(n_out if a == axis else f.shape[a] for a in range(3))
+    body = functools.partial(
+        _stencil_valid_body, taps=tuple(float(t) for t in taps), axis=axis,
+        n_out=n_out, scale=float(scale),
+    )
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[pl.BlockSpec(in_block, index_map)],
+        out_specs=pl.BlockSpec(out_block, index_map),
+        out_shape=jax.ShapeDtypeStruct(out_shape, f.dtype),
+        interpret=interpret,
+    )(f)
+
+
 def _stencil_body(f_ref, o_ref, *, taps, axis, symmetric, scale):
     f = f_ref[...]
     if symmetric:

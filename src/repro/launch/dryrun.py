@@ -28,7 +28,8 @@ from repro.configs import ARCHS, REGISTRATIONS, SHAPES
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.roofline.hlo import analyze_hlo
-from repro.roofline.analysis import model_flops, roofline_terms
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.lm import model_flops
 from repro.train import steps as tsteps
 
 #: long_500k needs a sub-quadratic sequence path; the pure full-attention

@@ -1,2 +1,5 @@
-from .hlo import collective_bytes  # noqa: F401
-from .analysis import HW, roofline_terms, model_flops  # noqa: F401
+from .hlo import analyze_hlo, collective_bytes  # noqa: F401
+from .analysis import (  # noqa: F401
+    HW, KernelRoofline, achieved_fraction, kernel_roofline, roofline_terms,
+)
+from .lm import model_flops  # noqa: F401

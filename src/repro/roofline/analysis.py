@@ -8,10 +8,11 @@
 per-device, so dividing global quantities by chip count is equivalent to the
 assignment's formulas.)
 
-MODEL_FLOPS: 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D for inference
-(N = active params for MoE, D = tokens processed globally). The ratio
-MODEL_FLOPS / (HLO_FLOPs * chips) is the "useful fraction" — it exposes
-remat recompute, masked-out attention work, and MoE dispatch overhead.
+Only *generic* roofline math lives here — per-kernel bounds
+(:func:`kernel_roofline`) and the three-term step model
+(:func:`roofline_terms`) — so the registration kernel benches can import it
+without touching transformer config fields. The LM-specific useful-FLOPs
+accounting (``model_flops``) is in :mod:`repro.roofline.lm`.
 """
 
 from __future__ import annotations
@@ -42,26 +43,53 @@ class RooflineResult:
     roofline_fraction: float      # model-flops-time / step time
 
 
-def model_flops(cfg, shape_cfg, dec_tokens: Optional[int] = None) -> float:
-    """6*N*D (train) or 2*N*D (inference); N = active params.
+@dataclass
+class KernelRoofline:
+    """Roofline time bound of one kernel/program from its HLO costs."""
 
-    Encoder-decoder models split: encoder params see encoder tokens only,
-    decoder (+cross+embedding) params see decoder tokens only.
-    """
-    _, n_active = cfg.param_counts()
-    mult = 6.0 if shape_cfg.kind == "train" else 2.0
-    b, s = shape_cfg.global_batch, shape_cfg.seq_len
-    if shape_cfg.kind in ("train", "prefill"):
-        if cfg.is_encdec:
-            enc_layer = (cfg._attn_params() + cfg._dense_mlp_params()
-                         + 2 * cfg.d_model)
-            n_enc = cfg.n_enc_layers * enc_layer + cfg.d_model
-            n_dec = n_active - n_enc
-            return mult * (n_enc * b * s + n_dec * b * (s // cfg.dec_ratio))
-        return mult * n_active * b * s
-    # decode: one token per sequence
-    tokens = b * (dec_tokens or 1)
-    return 2.0 * n_active * tokens
+    flops: float
+    mem_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    roofline_s: float       # max of the three terms (no-overlap lower bound)
+    bound: str              # "compute" | "memory" | "collective"
+    intensity: float        # FLOP per HBM byte
+
+
+def kernel_roofline(
+    flops: float,
+    mem_bytes: float,
+    collective_bytes: float = 0.0,
+    hw: Optional[Dict[str, float]] = None,
+) -> KernelRoofline:
+    """Per-kernel roofline bound: whichever of compute / HBM / interconnect
+    takes longest is the floor on the kernel's runtime. ``hw`` overrides the
+    TPU v5e constants (e.g. for a host-CPU calibration run)."""
+    hw = HW if hw is None else hw
+    t_c = flops / hw["peak_flops"]
+    t_m = mem_bytes / hw["hbm_bw"]
+    t_x = collective_bytes / hw["link_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bound = max(terms, key=terms.get)
+    return KernelRoofline(
+        flops=flops,
+        mem_bytes=mem_bytes,
+        collective_bytes=collective_bytes,
+        compute_s=t_c,
+        memory_s=t_m,
+        collective_s=t_x,
+        roofline_s=max(t_c, t_m, t_x),
+        bound=bound,
+        intensity=(flops / mem_bytes) if mem_bytes > 0 else 0.0,
+    )
+
+
+def achieved_fraction(roofline_s: float, measured_s: float) -> float:
+    """Fraction of the roofline bound a measured runtime achieves (<= 1 when
+    the model holds; > 1 flags a mis-modeled kernel or wrong HW constants)."""
+    return roofline_s / measured_s if measured_s > 0 else 0.0
 
 
 def roofline_terms(

@@ -9,7 +9,10 @@ framework leans on scan-over-layers, we walk the HLO module ourselves:
     scheduled HLO — bodies are weighted by their trip counts (nested loops
     multiply);
   * FLOPs: ``dot`` ops contribute 2 * prod(output dims) * prod(contracting
-    dims) (fusion computations are recursed for embedded dots);
+    dims) (fusion computations are recursed for embedded dots); float
+    elementwise arithmetic is tallied separately into ``ew_flops`` (1 FLOP
+    per output element) so stencil/gather-dominated kernels get a nonzero
+    compute roofline without perturbing matmul-only accounting;
   * memory bytes: per top-level op, operand bytes + output bytes (operands
     resolved through the computation's symbol table) — fusion internals
     excluded, matching the HBM-traffic model of cost_analysis;
@@ -62,6 +65,16 @@ _COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute", "all-reduce-start", "all-gather-start",
                 "collective-permute-start"}
 
+# Float elementwise arithmetic, 1 FLOP per output element. Counted into the
+# separate ``ew_flops`` field: matmul-dominated (LM) accounting keeps using
+# ``flops`` (dots only), while stencil/gather kernels — registration — sum
+# both for their compute roofline.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "maximum",
+    "minimum", "exponential", "log", "sqrt", "rsqrt", "power", "tanh",
+    "cosine", "sine", "floor", "ceil", "round-nearest-afz", "clamp",
+}
+
 
 def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
     out = []
@@ -100,13 +113,15 @@ class Computation:
 
 @dataclass
 class Costs:
-    flops: float = 0.0
+    flops: float = 0.0       # dot FLOPs (2*M*N*K)
+    ew_flops: float = 0.0    # float elementwise FLOPs (1 per output element)
     mem_bytes: float = 0.0
     coll_bytes: float = 0.0
     coll_by_kind: Dict[str, float] = field(default_factory=dict)
 
     def add(self, other: "Costs", mult: float = 1.0):
         self.flops += mult * other.flops
+        self.ew_flops += mult * other.ew_flops
         self.mem_bytes += mult * other.mem_bytes
         self.coll_bytes += mult * other.coll_bytes
         for k, v in other.coll_by_kind.items():
@@ -161,6 +176,20 @@ def _dot_flops(op: Op, comp: Computation) -> float:
                 if ci < len(dims):
                     k *= dims[ci]
     return 2.0 * out_elems * k
+
+
+def _float_out_elems(type_str: str) -> float:
+    """Output element count summed over float-dtyped shapes only (integer
+    index arithmetic in loop carries is bookkeeping, not FLOPs)."""
+    n = 0
+    for dt, dims in _shape_dims(type_str):
+        if not (dt.startswith("f") or dt.startswith("bf")):
+            continue
+        e = 1
+        for d in dims:
+            e *= d
+        n += e
+    return float(n)
 
 
 def _group_size(rest: str) -> int:
@@ -285,6 +314,8 @@ def _walk(comp: Computation, comps: Dict[str, Computation],
                 biggest = max(sub, key=lambda c: c.flops + c.mem_bytes)
                 total.add(biggest, 1.0)
             continue
+        if op.kind in _ELEMENTWISE:
+            total.ew_flops += _float_out_elems(op.out_type)
         if op.kind in _MEM_EXCLUDE:
             continue
         if not fused:

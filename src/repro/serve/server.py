@@ -76,6 +76,7 @@ class ServeConfig:
     backend: str = "jnp"
     mixed_precision: bool = False
     use_plan: bool = True
+    use_fused_matvec: bool = False
     # warm-start cache
     warm_start: bool = True
     cache_dir: Optional[str] = None   # persist per-subject velocities
@@ -87,16 +88,21 @@ class ServeConfig:
     slab_axis: Optional[str] = None
     ensemble_axis: Optional[str] = None
     halo: int = 6
+    halo_compression: str = "none"
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.halo_compression not in ("none", "int8"):
+            raise ValueError("halo_compression must be 'none' or 'int8', "
+                             f"got {self.halo_compression!r}")
         if self.mesh is not None:
             if not self.pad_waves:
                 raise ValueError("mesh serving requires pad_waves=True "
                                  "(fixed wave width)")
-            if self.backend != "jnp":
-                raise ValueError("mesh serving requires backend='jnp'")
+            if self.backend not in ("jnp", "pallas"):
+                raise ValueError("mesh serving requires backend 'jnp' or "
+                                 f"'pallas', got {self.backend!r}")
 
 
 class _AssembledWave(NamedTuple):
@@ -288,7 +294,7 @@ class Server:
         return _reg.make_transport_config(
             key.variant, nt=c.nt, backend=c.backend,
             mixed_precision=c.mixed_precision, use_plan=c.use_plan,
-            measure=key.measure)
+            measure=key.measure, use_fused_matvec=c.use_fused_matvec)
 
     def _step_for(self, key: BucketKey):
         step = self._steps.get(key)
@@ -298,7 +304,8 @@ class Server:
                 from repro.distributed import claire_dist as _dist
                 step = _dist.make_slab_step(
                     self.config.mesh, cfg_t, self._gn, self._slab_axis,
-                    self.config.halo, ens_axis=self._ens_axis)
+                    self.config.halo, ens_axis=self._ens_axis,
+                    compress=self.config.halo_compression)
             else:
                 step = _gn._make_batch_step(cfg_t, self._gn, donate=True)
             self._steps[key] = step

@@ -1,0 +1,73 @@
+"""Fused-epilogue Pallas PCG matvec vs the plan-based XLA reference.
+
+The fused path (`hessian._matvec_fused`) collapses the incremental-state
+transport, the adjoint transport, and the trapezoid body force of one
+Hessian application into unrolled `apply_plan_fused` calls. It must agree
+with the XLA plan path to fp32 op-ordering noise across interpolation
+variants and distance measures — it is the same math, only rescheduled.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gradient as GR
+from repro.core import hessian as HS
+from repro.core.registration import make_transport_config
+from repro.data import synthetic as S
+
+BETA, GAMMA = 5e-4, 1e-4
+
+
+def _setup(variant, measure, n=16, seed=3):
+    pair = S.make_pair(jax.random.PRNGKey(seed), (n, n, n), amplitude=0.5)
+    v = 0.3 * S.random_velocity(jax.random.PRNGKey(seed + 1), (n, n, n))
+    vt = S.random_velocity(jax.random.PRNGKey(seed + 2), (n, n, n),
+                           amplitude=0.2)
+    return pair, v, vt
+
+
+@pytest.mark.parametrize("variant,measure", [
+    ("fd8-cubic", "ssd"),
+    ("fft-cubic", "ssd"),
+    ("fd8-lagrange", "ssd"),
+    ("fd8-cubic", "ncc"),
+])
+def test_fused_matvec_matches_xla(variant, measure):
+    pair, v, vt = _setup(variant, measure)
+    cfg = make_transport_config(variant, nt=4, measure=measure)
+    cfg_f = make_transport_config(variant, nt=4, measure=measure,
+                                  use_fused_matvec=True)
+    gs = jax.jit(lambda m0, m1, v_: GR.evaluate(m0, m1, v_, BETA, GAMMA, cfg)
+                 )(pair.m0, pair.m1, v)
+    ref = jax.jit(lambda vt_: HS.matvec(vt_, gs, v, BETA, GAMMA, cfg))(vt)
+    fused = jax.jit(lambda vt_: HS.matvec(vt_, gs, v, BETA, GAMMA, cfg_f))(vt)
+    dev = float(jnp.max(jnp.abs(ref - fused)))
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert dev <= 1e-5 * max(scale, 1.0), (variant, measure, dev, scale)
+
+
+def test_fused_dispatch_uses_fused_kernel(monkeypatch):
+    """matvec routes through _matvec_fused exactly when the knob is on and
+    the GradientState carries plans + trajectory gradients."""
+    pair, v, vt = _setup("fd8-cubic", "ssd", n=12)
+    cfg_f = make_transport_config("fd8-cubic", nt=2, use_fused_matvec=True)
+    gs = GR.evaluate(pair.m0, pair.m1, v, BETA, GAMMA, cfg_f)
+    calls = []
+    orig = HS._matvec_fused
+    monkeypatch.setattr(
+        HS, "_matvec_fused",
+        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    HS.matvec(vt, gs, v, BETA, GAMMA, cfg_f)
+    assert calls, "fused knob set but fused kernel not dispatched"
+    # without plans (e.g. a plan-free cfg's state) the knob degrades safely
+    calls.clear()
+    HS.matvec(vt, gs._replace(plan_fwd=None), v, BETA, GAMMA, cfg_f)
+    assert not calls
+
+
+def test_fused_requires_plan():
+    with pytest.raises(ValueError):
+        make_transport_config("fd8-cubic", use_plan=False,
+                              use_fused_matvec=True)

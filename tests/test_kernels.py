@@ -121,3 +121,25 @@ def test_solver_backend_pallas_equals_jnp():
     mj = T.solve_state(pair.m0, pair.v_true, cfg_j)[-1]
     mp = T.solve_state(pair.m0, pair.v_true, cfg_p)[-1]
     np.testing.assert_allclose(mj, mp, atol=3e-5)
+
+
+@pytest.mark.parametrize("n_loc,halo", [(8, 6), (12, 4), (16, 6)])
+def test_stencil_pencil_valid_matches_shifted_ref(n_loc, halo):
+    """Valid-mode (no-wrap) stencil on a halo-extended slab == the explicit
+    shifted-window jnp reference used by the jnp slab backend."""
+    from repro.core.derivatives import FD8_COEFFS
+    from repro.kernels.pencil import stencil_pencil_valid
+
+    r = len(FD8_COEFFS)
+    assert halo >= r
+    f_ext = _rand((n_loc + 2 * halo, 10, 12), jnp.float32, seed=5)
+    h = 1.0 / n_loc
+    got = stencil_pencil_valid(f_ext, 0, FD8_COEFFS, scale=1.0 / h)
+
+    ref = jnp.zeros((f_ext.shape[0] - 2 * r,) + f_ext.shape[1:])
+    for k, c in enumerate(FD8_COEFFS, start=1):
+        ref = ref + c * (f_ext[r + k:f_ext.shape[0] - r + k]
+                         - f_ext[r - k:f_ext.shape[0] - r - k])
+    ref = ref / h
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
